@@ -1,0 +1,65 @@
+"""Paper Table 1: depth (D) vs number of particles (P) at fixed effective
+parameter count, multi-SWAG on the ViT family.
+
+Halve the depth <-> double the particles; report time per epoch. Ideal
+scaling keeps the time constant along the diagonal (paper's 1x multiple).
+
+Rows: depth_vs_particles/d<depth>_p<particles>,us_per_epoch,eff_params=<n>
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.bdl import MultiSWAG
+from repro.core import ParticleModule
+from repro.data.loader import DataLoader
+from repro.models import api
+from repro.optim import adam
+
+from .util import emit, timeit
+
+
+def _module(depth: int):
+    cfg = configs.get("vit-mnist").smoke().replace(
+        n_units=depth, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=192)
+    return ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+
+
+def run(pairs=((8, 1), (4, 2), (2, 4), (1, 8)), num_batches: int = 3):
+    for depth, n in pairs:
+        mod = _module(depth)
+        n_params = sum(x.size for x in jax.tree.leaves(
+            mod.init(jax.random.PRNGKey(0))))
+        data = [jax.tree.map(jnp.asarray, b) for b in
+                DataLoader(mod.cfg, batch_size=8, num_batches=num_batches)]
+        with MultiSWAG(mod, num_devices=1) as ms:
+            ms.bayes_infer(data[:1], 1, optimizer=adam(1e-3),
+                           num_particles=n, max_rank=4)
+            pids = ms.push_dist.particle_ids()
+
+            def epoch():
+                for b in data:
+                    ms.push_dist.p_wait(
+                        [ms.push_dist.particles[p].step(b) for p in pids])
+                ms.push_dist.p_wait(
+                    [ms.push_dist.p_launch(p, "SWAG_COLLECT") for p in pids])
+            us = timeit(lambda: epoch() or jnp.zeros(()))
+        emit(f"depth_vs_particles/d{depth}_p{n}", us,
+             f"eff_params={n_params * n}")
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp oracle,
+plus the fused-vs-message-passing SVGD step comparison (EXPERIMENTS.md
+§Perf: paper-faithful NEL runtime vs the compiled stacked-particle path).
+
+Rows: kernels/<name>,us_per_call,<impl/shape>
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.bdl import SteinVGD, fused_svgd_step
+from repro.core import functional
+from repro.data.loader import DataLoader
+from repro.kernels import ops, ref
+from repro.optim import sgd
+
+from .util import emit, timeit, tiny_module
+
+
+def run():
+    # --- SVGD force: jnp oracle vs Pallas-interpret ------------------------
+    for n, D in [(8, 100_000), (32, 100_000)]:
+        t = jax.random.normal(jax.random.PRNGKey(0), (n, D)) * 0.05
+        g = jax.random.normal(jax.random.PRNGKey(1), (n, D))
+        jref = jax.jit(lambda a, b: ref.svgd_force(a, b, 1.0))
+        emit(f"kernels/svgd_force_ref_n{n}_D{D}", timeit(jref, t, g), "jnp")
+        emit(f"kernels/svgd_force_pallas_n{n}_D{D}",
+             timeit(lambda a, b: ops.svgd_force(a, b, jnp.float32(1.0)), t, g),
+             "pallas-interpret")
+
+    # --- SWAG moments -------------------------------------------------------
+    D = 500_000
+    m = jnp.zeros((D,))
+    p = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    jref = jax.jit(lambda m_, p_: ref.swag_moments(m_, m_, p_, 3.0))
+    emit(f"kernels/swag_moments_ref_D{D}", timeit(jref, m, p), "jnp")
+    from repro.kernels import swag_moments as sm
+    emit(f"kernels/swag_moments_pallas_D{D}",
+         timeit(jax.jit(lambda m_, p_: sm.moments_flat(m_, m_, p_, 3.0)), m, p),
+         "pallas-interpret")
+
+    # --- flash attention ----------------------------------------------------
+    B, S, H, KVH, hd = 1, 512, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    emit(f"kernels/flash_ref_S{S}",
+         timeit(jax.jit(lambda a, b, c: ref.flash_attention(a, b, c)), q, k, v),
+         "jnp-naive")
+    emit(f"kernels/flash_pallas_S{S}",
+         timeit(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v),
+         "pallas-interpret")
+
+    # --- SVGD: paper-faithful message passing vs compiled fused step -------
+    mod = tiny_module("vit-mnist", n_units=1, d_model=32)
+    data = [jax.tree.map(jnp.asarray, b) for b in
+            DataLoader(mod.cfg, batch_size=4, num_batches=2)]
+    n = 4
+    with SteinVGD(mod, num_devices=1) as sv:
+        sv.bayes_infer(data[:1], 1, num_particles=n, lr=1e-3)
+        us_mp = timeit(lambda: sv.push_dist.p_wait(
+            [sv.push_dist.p_launch(0, "SVGD_LEADER", 1e-3, 1.0, data, 1)])
+            and jnp.zeros(()), iters=2)
+    emit("svgd_impl/message_passing_p4", us_mp, "paper-faithful NEL")
+
+    stacked = functional.init_stacked(mod, n, jax.random.PRNGKey(0))
+    fstep = jax.jit(fused_svgd_step(mod.loss, lr=1e-3, lengthscale=1.0))
+
+    def fused_epoch(s):
+        for b in data:
+            s, _ = fstep(s, b)
+        return s
+    emit("svgd_impl/fused_p4", timeit(fused_epoch, stacked, iters=2),
+         "compiled stacked-particle")
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

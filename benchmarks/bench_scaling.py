@@ -1,0 +1,98 @@
+"""Paper Fig. 4 / Fig. 7: scaling of particles across devices per algorithm.
+
+Measures time-per-epoch for deep ensembles, multi-SWAG and SVGD as the
+particle count grows, through the Push particle runtime AND the paper's
+handwritten baselines, on the paper's three workload families adapted to
+this repo: ViT (vision), UNet-1D (PDE/SciML) and a tiny qwen-family LM.
+
+Rows: scaling/<workload>/<algo>/<impl>/p<particles>,us_per_epoch,devices=<n>
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.bdl import DeepEnsemble, MultiSWAG, SteinVGD, baselines
+from repro.data.loader import DataLoader
+from repro.optim import adam, sgd
+
+from .util import emit, timeit, tiny_module
+
+
+def _data(cfg, num_batches: int, batch: int = 8):
+    dl = DataLoader(cfg, batch_size=batch, seq_len=32, num_batches=num_batches)
+    return [jax.tree.map(jnp.asarray, b) for b in dl]
+
+
+def run(num_devices: int = 1, particles=(1, 2, 4), num_batches: int = 3,
+        workloads=("vit-mnist", "unet-advection", "qwen1.5-0.5b")):
+    for arch in workloads:
+        mod = tiny_module(arch)
+        data = _data(mod.cfg, num_batches)
+
+        for n in particles:
+            # --- deep ensemble (Push) -----------------------------------
+            with DeepEnsemble(mod, num_devices=num_devices) as de:
+                pids = [de.push_dist.p_create(adam(1e-3)) for _ in range(n)]
+
+                def epoch():
+                    for b in data:
+                        de.push_dist.p_wait(
+                            [de.push_dist.particles[p].step(b) for p in pids])
+                us = timeit(lambda: epoch() or jnp.zeros(()))
+            emit(f"scaling/{arch}/ensemble/push/p{n}", us,
+                 f"devices={num_devices}")
+
+            # --- multi-SWAG (Push) ---------------------------------------
+            with MultiSWAG(mod, num_devices=num_devices) as ms:
+                ms.bayes_infer(data[:1], 1, optimizer=adam(1e-3),
+                               num_particles=n, max_rank=4)  # build+jit
+                pids = ms.push_dist.particle_ids()
+
+                def epoch_sw():
+                    for b in data:
+                        ms.push_dist.p_wait(
+                            [ms.push_dist.particles[p].step(b) for p in pids])
+                    ms.push_dist.p_wait(
+                        [ms.push_dist.p_launch(p, "SWAG_COLLECT") for p in pids])
+                us = timeit(lambda: epoch_sw() or jnp.zeros(()))
+            emit(f"scaling/{arch}/multiswag/push/p{n}", us,
+                 f"devices={num_devices}")
+
+            # --- SVGD (Push, message passing) ----------------------------
+            with SteinVGD(mod, num_devices=num_devices) as sv:
+                sv.bayes_infer(data[:1], 1, num_particles=n, lr=1e-3)  # jit
+                us = timeit(lambda: sv.push_dist.p_wait(
+                    [sv.push_dist.p_launch(0, "SVGD_LEADER", 1e-3, 1.0,
+                                           data, 1)]) and jnp.zeros(()))
+            emit(f"scaling/{arch}/svgd/push/p{n}", us,
+                 f"devices={num_devices}")
+
+            # --- handwritten baselines (paper Fig. 4 grey curves) ---------
+            opt_b = adam(1e-3)
+            us = timeit(
+                lambda: (baselines.ensemble_baseline(mod, opt_b, n,
+                                                     data, 1), jnp.zeros(()))[1],
+                iters=2)
+            emit(f"scaling/{arch}/ensemble/baseline/p{n}", us,
+                 f"devices={num_devices}")
+
+            us = timeit(lambda: (baselines.svgd_baseline(
+                mod, n, data, 1, lr=1e-3), jnp.zeros(()))[1], iters=2)
+            emit(f"scaling/{arch}/svgd/baseline/p{n}", us,
+                 f"devices={num_devices}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--particles", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--batches", type=int, default=3)
+    a = ap.parse_args()
+    run(a.devices, tuple(a.particles), a.batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 2 / Appendix C.3 stress test: many small particles through
+the NEL, with the particle cache oversubscribed (cache_size < particles).
+
+Reports time per epoch and the NEL's swap statistics — the paper's
+"swapping particles on and off the accelerator is even more costly" story.
+
+Rows: stress/p<particles>_cache<size>,us_per_epoch,swaps=<in>/<out>
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.bdl import DeepEnsemble
+from repro.data.loader import DataLoader
+from repro.optim import sgd
+
+from .util import emit, timeit, tiny_module
+
+
+def run(counts=(8, 16, 32), cache_sizes=(4, 32), num_batches: int = 2):
+    mod = tiny_module("vit-mnist", n_units=1, d_model=32)
+    data = [jax.tree.map(jnp.asarray, b) for b in
+            DataLoader(mod.cfg, batch_size=4, num_batches=num_batches)]
+    for n in counts:
+        for cache in cache_sizes:
+            with DeepEnsemble(mod, num_devices=1, cache_size=cache) as de:
+                pids = [de.push_dist.p_create(sgd(1e-2)) for _ in range(n)]
+
+                def epoch():
+                    for b in data:
+                        de.push_dist.p_wait(
+                            [de.push_dist.particles[p].step(b) for p in pids])
+                us = timeit(lambda: epoch() or jnp.zeros(()), iters=2)
+                st = de.push_dist.nel.stats
+                emit(f"stress/p{n}_cache{cache}", us,
+                     f"swaps={st['swaps_in']}/{st['swaps_out']}")
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Container-scale sizes (single CPU
+core); EXPERIMENTS.md maps each section to the paper artifact and explains
+which trends are wall-clock-faithful vs structurally validated.
+
+  bench_scaling          Fig. 4 / Fig. 7  (particles x algorithms x devices)
+  bench_depth_particles  Table 1          (depth vs particle tradeoff)
+  bench_stress           Table 2 / C.3    (particle-cache oversubscription)
+  bench_accuracy         Tables 3-4       (multi-SWAG vs standard accuracy)
+  bench_kernels          (ours)           Pallas kernels + SVGD impls
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. kernels,stress")
+    args = ap.parse_args()
+    from . import (bench_accuracy, bench_depth_particles, bench_kernels,
+                   bench_scaling, bench_stress)
+    table = {
+        "scaling": bench_scaling.run,
+        "depth_particles": bench_depth_particles.run,
+        "stress": bench_stress.run,
+        "accuracy": bench_accuracy.run,
+        "kernels": bench_kernels.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(table)
+    print("name,us_per_call,derived")
+    for name, fn in table.items():
+        if name in only:
+            print(f"# --- {name} ---", flush=True)
+            fn()
+
+
+if __name__ == '__main__':
+    main()

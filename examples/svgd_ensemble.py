@@ -1,0 +1,74 @@
+"""SVGD on a ViT classifier: the paper's all-to-all particle algorithm.
+
+Runs Stein Variational Gradient Descent twice over the same particles:
+  1. the paper-faithful message-passing implementation (leader particle,
+     SVGD_STEP / SVGD_FOLLOW messages, read-only views), and
+  2. the beyond-paper compiled path (one XLA program over a stacked
+     particle axis),
+then verifies they agree and reports the ensemble accuracy.
+
+Run:  PYTHONPATH=src python examples/svgd_ensemble.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.bdl import SteinVGD, fused_svgd_step
+from repro.core import ParticleModule, functional
+from repro.data.loader import DataLoader
+from repro.models import api
+
+
+def main():
+    cfg = configs.get("vit-mnist").smoke().replace(n_units=2, d_model=64,
+                                                   n_heads=4, n_kv_heads=4,
+                                                   head_dim=16, d_ff=128)
+    mod = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+    train = [jax.tree.map(jnp.asarray, b) for b in
+             DataLoader(cfg, batch_size=16, num_batches=4, seed=0)]
+    test = [jax.tree.map(jnp.asarray, b) for b in
+            DataLoader(cfg, batch_size=64, num_batches=2, seed=9)]
+    N, LR, EPOCHS = 4, 2e-3, 6
+
+    # --- paper-faithful message-passing SVGD -------------------------------
+    sv = SteinVGD(mod, num_devices=1, seed=0)
+    pids, losses = sv.bayes_infer(train, EPOCHS, num_particles=N,
+                                  lengthscale=1.0, lr=LR)
+    mp_flat = jnp.stack([jax.flatten_util.ravel_pytree(
+        sv.push_dist.p_params(p))[0] for p in pids])
+    acc = _ensemble_acc(sv.push_dist, test)
+    print(f"message-passing SVGD: last losses {losses[-1]:.3f}, "
+          f"ensemble acc {acc:.3f}")
+    print(f"NEL stats: {sv.push_dist.nel.stats}")
+    sv.cleanup()
+
+    # --- compiled fused SVGD (same seeds => identical trajectory) ----------
+    rng = jax.random.PRNGKey(0)
+    inits = []
+    for _ in range(N):
+        rng, sub = jax.random.split(rng)
+        inits.append(mod.init(sub))
+    stacked = functional.stack_pytrees(inits)
+    step = jax.jit(fused_svgd_step(mod.loss, lr=LR, lengthscale=1.0))
+    for _ in range(EPOCHS):
+        for b in train:
+            stacked, _ = step(stacked, b)
+    fu_flat, _ = functional.flatten_stacked(stacked)
+    err = float(jnp.abs(mp_flat - fu_flat).max())
+    print(f"fused-vs-message-passing parameter agreement: max |diff| = {err:.2e}")
+    assert err < 1e-3
+
+
+def _ensemble_acc(pd, test):
+    accs = []
+    for b in test:
+        pred = pd.p_predict(b)
+        accs.append(float(jnp.mean(jnp.argmax(pred, -1) == b["labels"])))
+    return sum(accs) / len(accs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""End-to-end training driver: a qwen-family LM trained for a few hundred
+steps with the compiled ensemble path, cosine schedule, gradient clipping
+via microbatching, checkpointing and loss logging.
+
+Default size is container-friendly (~5M params); --preset 100m builds a
+~100M-parameter model (same code path — use on real hardware).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+      PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint, configs
+from repro.core import ParticleModule, functional
+from repro.data.loader import DataLoader
+from repro.models import api
+from repro.optim import adam
+from repro.optim.schedules import warmup_cosine
+
+PRESETS = {
+    # (layers, d_model, heads, d_ff, vocab, batch, seq)
+    "tiny": (4, 192, 4, 512, 2048, 8, 64),
+    "20m": (8, 384, 8, 1024, 8192, 8, 128),
+    "100m": (12, 768, 12, 2048, 32000, 8, 256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--particles", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    a = ap.parse_args()
+
+    L, D, H, F, V, B, S = PRESETS[a.preset]
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=L, d_model=D, n_heads=H, n_kv_heads=H, head_dim=D // H,
+        d_ff=F, vocab_size=V, max_seq_len=4 * S)
+    mod = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+
+    stacked = functional.init_stacked(mod, a.particles, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(stacked)) // a.particles
+    print(f"model: {L}L d={D} vocab={V} -> {n_params/1e6:.1f}M params x "
+          f"{a.particles} particles")
+
+    opt = adam(warmup_cosine(3e-3, 20, a.steps))
+    opt_state = jax.vmap(opt.init)(stacked)
+    step_fn = jax.jit(functional.ensemble_step(mod.loss, opt))
+
+    loader = DataLoader(cfg, batch_size=B, seq_len=S,
+                        num_batches=max(a.steps, 1), seed=0)
+    t0 = time.perf_counter()
+    first = None
+    for step, batch in enumerate(loader):
+        batch = jax.tree.map(jnp.asarray, batch)
+        stacked, opt_state, losses = step_fn(stacked, opt_state, batch)
+        if step == 0:
+            first = float(losses.mean())
+        if step % 20 == 0 or step == a.steps - 1:
+            l = float(losses.mean())
+            dt = time.perf_counter() - t0
+            tok_s = (step + 1) * B * S * a.particles / dt
+            print(f"step {step:4d}  loss {l:.4f}  ({tok_s:,.0f} tok/s)")
+        if a.ckpt_every and step and step % a.ckpt_every == 0:
+            path = checkpoint.save(a.ckpt_dir, step,
+                                   {"params": stacked, "opt": opt_state})
+            print(f"  checkpoint -> {path}")
+        if step + 1 >= a.steps:
+            break
+    last = float(losses.mean())
+    print(f"loss: {first:.4f} -> {last:.4f} "
+          f"({'OK: decreased' if last < first else 'WARNING: did not decrease'})")
+
+
+if __name__ == "__main__":
+    main()

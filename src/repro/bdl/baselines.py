@@ -1,0 +1,95 @@
+"""Handwritten (non-particle) baselines, as compared against in paper §5.1.
+
+These are the "baseline implementations" of Fig. 4: single-process,
+sequential-over-networks, no particle abstraction. The SVGD baseline
+materializes the full kernel matrix and updates all parameters only after
+the kernel matrix is computed, keeping one copy of each NN (paper §5.1's
+description verbatim).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from functools import partial
+
+from .svgd import svgd_force
+from .swag import swag_collect, swag_state_init
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _jit_sgd_step(module, optimizer, params, opt_state, batch):
+    loss, grads = jax.value_and_grad(lambda p: module.loss(p, batch)[0])(params)
+    params, opt_state = optimizer.update(params, grads, opt_state)
+    return params, opt_state, loss
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _jit_grad(module, params, batch):
+    return jax.grad(lambda p: module.loss(p, batch)[0])(params)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def _jit_kernel_update(theta, g, lr, lengthscale):
+    return theta - lr * svgd_force(theta, g, lengthscale)
+
+
+@jax.jit
+def _jit_collect(state, params):
+    return swag_collect(state, params, use_kernel=False)
+
+
+def ensemble_baseline(module, optimizer, n: int, dataloader, epochs: int,
+                      seed: int = 0):
+    """Sequential deep ensemble: train each NN one after another."""
+    rngs = jax.random.split(jax.random.PRNGKey(seed), n)
+    all_params = [module.init(r) for r in rngs]
+    opt_states = [optimizer.init(p) for p in all_params]
+    losses = [0.0] * n
+    for _ in range(epochs):
+        for batch in dataloader:
+            for i in range(n):
+                all_params[i], opt_states[i], l = _jit_sgd_step(
+                    module, optimizer, all_params[i], opt_states[i], batch)
+                losses[i] = float(l)
+    return all_params, losses
+
+
+def multiswag_baseline(module, optimizer, n: int, dataloader, epochs: int,
+                       pretrain_epochs: int = 0, max_rank: int = 20,
+                       seed: int = 0):
+    """Sequential multi-SWAG: ensemble training + per-NN moment collection."""
+    rngs = jax.random.split(jax.random.PRNGKey(seed), n)
+    all_params = [module.init(r) for r in rngs]
+    opt_states = [optimizer.init(p) for p in all_params]
+    swag_states = [swag_state_init(p, max_rank) for p in all_params]
+    for e in range(epochs):
+        for batch in dataloader:
+            for i in range(n):
+                all_params[i], opt_states[i], _ = _jit_sgd_step(
+                    module, optimizer, all_params[i], opt_states[i], batch)
+        if e >= pretrain_epochs:
+            for i in range(n):
+                swag_states[i] = _jit_collect(swag_states[i], all_params[i])
+    return all_params, swag_states
+
+
+def svgd_baseline(module, n: int, dataloader, epochs: int, *, lr: float,
+                  lengthscale: float = 1.0, seed: int = 0):
+    """Monolithic SVGD: full kernel matrix, then update all params (one copy
+    of each NN, no concurrency — paper §5.1 baseline)."""
+    rngs = jax.random.split(jax.random.PRNGKey(seed), n)
+    all_params = [module.init(r) for r in rngs]
+    _, unravel = ravel_pytree(all_params[0])
+    for _ in range(epochs):
+        for batch in dataloader:
+            grads = [_jit_grad(module, p, batch) for p in all_params]  # sequential
+            theta = jnp.stack([ravel_pytree(p)[0] for p in all_params])
+            g = jnp.stack([ravel_pytree(gr)[0] for gr in grads])
+            theta = _jit_kernel_update(theta.astype(jnp.float32),
+                                       g.astype(jnp.float32), lr, lengthscale)
+            all_params = [unravel(theta[i]) for i in range(n)]
+    return all_params

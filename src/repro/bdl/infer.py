@@ -1,0 +1,39 @@
+"""Infer base class (paper App. B): BDL algorithms extend Infer and express
+inference as concurrent procedures on particles. The same algorithm code is
+agnostic to the number of devices (paper §B.2 comment 2)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from ..core import ParticleModule, PushDistribution
+
+
+class Infer:
+    def __init__(self, module: ParticleModule, *, num_devices: int = 1,
+                 cache_size: int = 4, view_size: int = 4, seed: int = 0):
+        self.module = module
+        self.num_devices = num_devices
+        self.push_dist = PushDistribution(module, num_devices=num_devices,
+                                          cache_size=cache_size,
+                                          view_size=view_size, seed=seed)
+
+    def bayes_infer(self, dataloader, epochs: int, **kw):
+        raise NotImplementedError
+
+    def posterior_pred(self, batch):
+        return self.push_dist.p_predict(batch)
+
+    def p_parameters(self):
+        return [self.push_dist.p_params(pid)
+                for pid in self.push_dist.particle_ids()]
+
+    def cleanup(self):
+        self.push_dist.cleanup()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.cleanup()

@@ -1,0 +1,165 @@
+"""Stein Variational Gradient Descent (Liu & Wang, 2016) on particles.
+
+Two implementations, benchmarked against each other in EXPERIMENTS.md §Perf:
+
+1. ``SteinVGD`` — the paper-faithful message-passing version (paper Fig. 5/6):
+   a leader particle drives SVGD_STEP (local backward on every particle),
+   gathers every particle's (params, grads) via read-only views (all-to-all,
+   paper Fig. 1), computes the kernel update, and sends SVGD_FOLLOW to each
+   particle. Updates are applied concurrently from read-only snapshots —
+   the property the paper credits for beating its monolithic baseline.
+
+2. ``fused_svgd_step`` — the beyond-paper compiled path: stacked particle
+   axis, flattened (n, D) parameter matrix, RBF kernel + driving force in
+   one XLA program (Pallas kernels on TPU; jnp oracle elsewhere).
+
+Update rule (standard SVGD, descent form; see DESIGN.md for the sign
+discrepancy in the paper's Fig. 6 listing):
+
+    theta_i <- theta_i - (lr / n) * sum_j [ k(theta_j, theta_i) * g_j
+                                            - (theta_i - theta_j)/ell^2 * k_ji ]
+
+with g_j = grad of the loss (= -grad log posterior), k = RBF with
+bandwidth ell (fixed, or the median heuristic when lengthscale <= 0).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from ..core import functional
+from .infer import Infer
+
+
+# ---------------------------------------------------------------------------
+# functional core (used by both paths; Pallas-accelerated when enabled)
+# ---------------------------------------------------------------------------
+
+def rbf_lengthscale(theta, lengthscale: float):
+    """Median heuristic when lengthscale <= 0 (Liu & Wang §5)."""
+    if lengthscale > 0:
+        return jnp.asarray(lengthscale, jnp.float32)
+    n = theta.shape[0]
+    sq = pairwise_sqdist(theta)
+    med = jnp.median(sq)
+    return jnp.sqrt(0.5 * med / jnp.log(n + 1.0) + 1e-12)
+
+
+def pairwise_sqdist(theta):
+    """theta: (n, D) -> (n, n) squared distances (jnp oracle)."""
+    sq = jnp.sum(theta * theta, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * theta @ theta.T
+    return jnp.maximum(d2, 0.0)
+
+
+def svgd_force(theta, grads, lengthscale: float, use_kernel: bool = False):
+    """theta, grads: (n, D) -> phi: (n, D) descent direction.
+
+    phi_i = (1/n) sum_j [ k_ji g_j - k_ji (theta_i - theta_j) / ell^2 ]
+    """
+    if use_kernel:
+        from ..kernels import svgd_rbf as _k
+        return _k.svgd_force(theta, grads, lengthscale)
+    n = theta.shape[0]
+    ell = rbf_lengthscale(theta, lengthscale)
+    d2 = pairwise_sqdist(theta) * (1.0 - jnp.eye(theta.shape[0]))
+    K = jnp.exp(-0.5 * d2 / (ell * ell))                       # (n, n), k_ji
+    ksum = K.sum(axis=0)                                       # sum_j k_ji
+    attract = K.T @ grads                                      # (n, D)
+    repulse = (ksum[:, None] * theta - K.T @ theta) / (ell * ell)
+    return (attract - repulse) / n
+
+
+def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
+                    use_kernel: bool = False):
+    """One compiled SVGD step over stacked particles."""
+    vag = jax.vmap(jax.value_and_grad(lambda p, b: loss_fn(p, b)[0]),
+                   in_axes=(0, None))
+
+    def step(stacked_params, batch):
+        losses, grads = vag(stacked_params, batch)
+        theta, unravel = functional.flatten_stacked(stacked_params)
+        g, _ = functional.flatten_stacked(grads)
+        phi = svgd_force(theta.astype(jnp.float32), g.astype(jnp.float32),
+                         lengthscale, use_kernel=use_kernel)
+        new_theta = theta - lr * phi.astype(theta.dtype)
+        new_params = jax.vmap(unravel)(new_theta)
+        return new_params, losses
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# paper-faithful message-passing SVGD (Fig. 5 / Fig. 6)
+# ---------------------------------------------------------------------------
+
+def _svgd_step(particle, batch):
+    """SVGD_STEP handler: local backward pass, stash grads."""
+    return particle.grad(batch).wait()
+
+
+def _svgd_follow(particle, lr, update):
+    """SVGD_FOLLOW handler: apply the leader's kernel update."""
+    return particle.apply_update(update, lr).wait()
+
+
+def _svgd_leader(particle, lr, lengthscale, dataloader, epochs):
+    """SVGD_LEADER handler (paper Fig. 6, jax-native).
+
+    Per batch: (1) step every particle (concurrent backward passes),
+    (2) gather every particle's params+grads via read-only views,
+    (3) compute the kernel force, (4) send SVGD_FOLLOW to every particle.
+    """
+    n_pids = particle.particle_ids()
+    others = [pid for pid in n_pids if pid != particle.pid]
+    losses = []
+    for _ in range(epochs):
+        for batch in dataloader:
+            # 1. step every particle
+            fut = particle.grad(batch)
+            futs = [particle.send(pid, "SVGD_STEP", batch) for pid in others]
+            losses = [float(fut.wait())] + [float(f.wait()) for f in futs]
+
+            # 2. gather every other particle's parameters + grads
+            views = {pid: particle.get(pid) for pid in others}
+            views = {pid: f.wait() for pid, f in views.items()}
+
+            flat, unravel = ravel_pytree(particle.state["params"])
+            theta = [flat] + [ravel_pytree(views[pid].parameters())[0]
+                              for pid in others]
+            gflat = [ravel_pytree(particle.state["grads"])[0]] + \
+                    [ravel_pytree(views[pid].gradients())[0] for pid in others]
+            theta = jnp.stack(theta).astype(jnp.float32)
+            g = jnp.stack(gflat).astype(jnp.float32)
+
+            # 3. kernel force
+            phi = svgd_force(theta, g, lengthscale)
+
+            # 4. send updates (concurrent follow)
+            futs = [particle.send(pid, "SVGD_FOLLOW", lr, unravel(phi[i + 1]))
+                    for i, pid in enumerate(others)]
+            _svgd_follow(particle, lr, unravel(phi[0]))
+            for f in futs:
+                f.wait()
+    return losses
+
+
+class SteinVGD(Infer):
+    def bayes_infer(self, dataloader, epochs: int, *, num_particles: int = 4,
+                    lengthscale: float = 1.0, lr: float = 1e-3):
+        pid_leader = self.push_dist.p_create(
+            None, device=0, receive={"SVGD_LEADER": _svgd_leader,
+                                     "SVGD_STEP": _svgd_step,
+                                     "SVGD_FOLLOW": _svgd_follow})
+        pids = [pid_leader]
+        for p in range(num_particles - 1):
+            pid = self.push_dist.p_create(
+                None, device=(p + 1) % self.num_devices,
+                receive={"SVGD_STEP": _svgd_step, "SVGD_FOLLOW": _svgd_follow})
+            pids.append(pid)
+        losses = self.push_dist.p_wait([self.push_dist.p_launch(
+            pid_leader, "SVGD_LEADER", lr, lengthscale, dataloader, epochs)])[0]
+        return pids, losses

@@ -1,0 +1,141 @@
+"""SWAG / multi-SWAG (Maddox et al., 2019; Wilson & Izmailov, 2020).
+
+SWAG assumes the posterior is Normal with moments taken from the SGD
+trajectory (paper §3.4's "assumptions that introduce densities"):
+
+    mean     <- running average of theta
+    sq_mean  <- running average of theta^2
+    dev      <- ring buffer of the last K deviations (low-rank covariance)
+
+sample:  theta = mean + sigma_diag^(1/2) z1 / sqrt(2)
+                      + D z2 / sqrt(2 (K - 1))
+
+multi-SWAG = an ensemble of SWAG particles: each particle carries its own
+moments in particle.state (particle-local computation only -> scales like
+deep ensembles in the paper's Fig. 4). The moment update runs through
+repro.kernels.swag_moments (Pallas) when enabled, else the jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .infer import Infer
+
+
+# ---------------------------------------------------------------------------
+# functional SWAG state ops (vmappable / jittable; used by both paths)
+# ---------------------------------------------------------------------------
+
+def swag_state_init(params, max_rank: int = 20):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {
+        "n": jnp.zeros((), jnp.float32),
+        "mean": zeros,
+        "sq_mean": jax.tree.map(jnp.zeros_like, params),
+        "dev": jax.tree.map(
+            lambda p: jnp.zeros((max_rank,) + p.shape, p.dtype), params),
+        "rank": jnp.zeros((), jnp.int32),
+    }
+
+
+def swag_collect(state, params, use_kernel: bool = True):
+    """One moment-collection step (after an SGD epoch in the paper's setup)."""
+    n = state["n"]
+    if use_kernel:
+        from ..kernels import swag_moments as _k
+        upd = _k.update_moments
+    else:
+        upd = _update_moments_ref
+    mean, sq = upd(state["mean"], state["sq_mean"], params, n)
+    max_rank = jax.tree.leaves(state["dev"])[0].shape[0]
+    slot = state["rank"] % max_rank
+    dev = jax.tree.map(
+        lambda d, p, m: jax.lax.dynamic_update_index_in_dim(
+            d, (p - m).astype(d.dtype), slot, 0),
+        state["dev"], params, mean)
+    return {"n": n + 1, "mean": mean, "sq_mean": sq, "dev": dev,
+            "rank": state["rank"] + 1}
+
+
+def _update_moments_ref(mean, sq_mean, params, n):
+    new_mean = jax.tree.map(lambda m, p: (m * n + p) / (n + 1), mean, params)
+    new_sq = jax.tree.map(lambda s, p: (s * n + p * p) / (n + 1), sq_mean, params)
+    return new_mean, new_sq
+
+
+def swag_sample(state, rng, scale: float = 1.0):
+    """Draw one parameter sample from the SWAG Gaussian."""
+    k1, k2 = jax.random.split(rng)
+    leaves, tdef = jax.tree.flatten(state["mean"])
+    z1_keys = jax.random.split(k1, len(leaves))
+    max_rank = jax.tree.leaves(state["dev"])[0].shape[0]
+    K_eff = jnp.maximum(jnp.minimum(state["rank"], max_rank).astype(jnp.float32), 2.0)
+    z2 = jax.random.normal(k2, (max_rank,))
+    rank_mask = (jnp.arange(max_rank) < state["rank"]).astype(jnp.float32)
+
+    def one(m, s, d, zk):
+        var = jnp.maximum(s - m * m, 1e-30)
+        diag = jnp.sqrt(var) * jax.random.normal(zk, m.shape) / jnp.sqrt(2.0)
+        zw = (z2 * rank_mask).astype(d.dtype)
+        lowrank = jnp.tensordot(zw, d, axes=(0, 0)) / jnp.sqrt(2.0 * (K_eff - 1.0))
+        return m + scale * (diag + lowrank).astype(m.dtype)
+
+    sq_leaves = tdef.flatten_up_to(state["sq_mean"])
+    dev_leaves = tdef.flatten_up_to(state["dev"])
+    out = [one(m, s, d, zk) for m, s, d, zk in
+           zip(leaves, sq_leaves, dev_leaves, z1_keys)]
+    return tdef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# particle-based multi-SWAG (the paper's path)
+# ---------------------------------------------------------------------------
+
+def _swag_step(particle, batch):
+    return particle.step(batch).wait()
+
+
+def _swag_collect_msg(particle):
+    particle.state["swag"] = swag_collect(particle.state["swag"],
+                                          particle.state["params"],
+                                          use_kernel=False)
+    return None
+
+
+class MultiSWAG(Infer):
+    def bayes_infer(self, dataloader, epochs: int, *, optimizer,
+                    num_particles: int = 4, pretrain_epochs: int = 0,
+                    max_rank: int = 20):
+        pids = []
+        for _ in range(num_particles):
+            pid = self.push_dist.p_create(
+                optimizer, receive={"SWAG_COLLECT": _swag_collect_msg})
+            p = self.push_dist.particles[pid]
+            p.state["swag"] = swag_state_init(p.state["params"], max_rank)
+            pids.append(pid)
+        losses = []
+        for e in range(epochs):
+            for batch in dataloader:
+                futs = [self.push_dist.particles[pid].step(batch) for pid in pids]
+                losses = [float(f.wait()) for f in futs]
+            if e >= pretrain_epochs:  # collect moments once per epoch
+                futs = [self.push_dist.p_launch(pid, "SWAG_COLLECT")
+                        for pid in pids]
+                self.push_dist.p_wait(futs)
+        return pids, losses
+
+    def sample_predict(self, batch, *, samples_per_particle: int = 5,
+                       rng=None, scale: float = 1.0):
+        """multi-SWAG prediction: average over SWAG samples of every particle."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        outs = []
+        for pid in self.push_dist.particle_ids():
+            p = self.push_dist.particles[pid]
+            for _ in range(samples_per_particle):
+                rng, sub = jax.random.split(rng)
+                theta = swag_sample(p.state["swag"], sub, scale)
+                outs.append(self.module._forward(theta, batch))
+        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)

@@ -1,0 +1,1 @@
+from .ckpt import save, restore, latest_step

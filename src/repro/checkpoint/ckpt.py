@@ -1,0 +1,69 @@
+"""Step-versioned pytree checkpointing (npz-based, no orbax dependency).
+
+save(dir, step, tree) writes <dir>/ckpt_<step>.npz with flattened leaves +
+a JSON treedef manifest; restore(dir, step=None) returns (step, tree).
+Atomic via tmp-file rename. Works for params, optimizer states and SWAG
+moments alike (anything jax.tree-flattenable with array leaves).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {f"leaf_{i}": np.asarray(v) for i, (_, v) in enumerate(leaves_with_paths)}
+    manifest = {"paths": [_keystr(p) for p, _ in leaves_with_paths],
+                "step": step}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, __manifest__=json.dumps(manifest), **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, like: Any = None
+            ) -> Tuple[int, Any]:
+    """Returns (step, tree). If `like` is given, leaves are reassembled into
+    its structure (paths must match); else a flat {path: array} dict."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(str(data["__manifest__"]))
+    arrays = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
+    if like is None:
+        return step, dict(zip(manifest["paths"], arrays))
+    leaves_with_paths, tdef = jax.tree_util.tree_flatten_with_path(like)
+    by_path = dict(zip(manifest["paths"], arrays))
+    out = []
+    for p, leaf in leaves_with_paths:
+        key = _keystr(p)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        out.append(jax.numpy.asarray(by_path[key], dtype=leaf.dtype))
+    return step, jax.tree_util.tree_unflatten(tdef, out)

@@ -1,0 +1,152 @@
+"""Config system for repro models.
+
+A ``ModelConfig`` fully describes one architecture (one of the 10 assigned
+configs, the paper's own ViT/UNet workloads, or a reduced smoke variant).
+Configs are plain frozen dataclasses so they can be hashed into jit caches
+and printed into EXPERIMENTS.md.
+
+The layer stack is described by a *pattern* (a repeating unit of layer
+kinds, scanned with ``lax.scan`` over units for compile scalability), plus
+optional non-repeating ``head_layers`` / ``tail_layers``.
+
+Layer kinds:
+  attn_mlp      pre-norm GQA attention + (SwiGLU|GELU) MLP
+  attn_moe      pre-norm GQA attention + top-k MoE (optional shared experts)
+  local         attn_mlp with sliding-window attention
+  rwkv          RWKV6 time-mix + channel-mix
+  mamba         Mamba2 (SSD) block
+  shared_attn   zamba2-style shared transformer block (one param copy,
+                applied at every occurrence in the pattern)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm | vision | pde
+    d_model: int
+    vocab_size: int
+
+    # --- layer stack -----------------------------------------------------
+    pattern: Tuple[str, ...] = ("attn_mlp",)
+    n_units: int = 1                 # pattern repeats; total = head + units*|pattern| + tail
+    head_layers: Tuple[str, ...] = ()
+    tail_layers: Tuple[str, ...] = ()
+
+    # --- attention -------------------------------------------------------
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # for 'local' layers
+    logit_softcap: float = 0.0
+
+    # --- mlp ---------------------------------------------------------------
+    d_ff: int = 0
+    act: str = "swiglu"              # swiglu | gelu
+    norm: str = "rms"                # rms | layer
+
+    # --- moe ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0             # hidden dim of the shared-expert MLP
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- ssm / hybrid ------------------------------------------------------
+    ssm_state: int = 0               # Mamba2 d_state
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder (audio) -------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    n_frames: int = 1500             # stubbed conv-frontend output length
+
+    # --- vlm ----------------------------------------------------------------
+    n_prefix_tokens: int = 0         # stubbed SigLIP patch embeddings
+    prefix_lm: bool = False          # bidirectional attention over the prefix
+
+    # --- misc ----------------------------------------------------------------
+    tie_embeddings: bool = False
+    max_seq_len: int = 8192
+    dtype: str = "float32"           # compute dtype for smokes; dry-run uses bf16
+    param_dtype: str = "float32"     # bf16 for the largest archs in the dry run
+    remat: bool = False              # checkpoint the scanned layer body
+    optimizer: str = "adam"          # adam | adafactor | sgd
+    # particle-parallelism default (the paper's technique) per input shape
+    default_particles: int = 1
+    # which model axes get tensor-parallel sharding in the dry run
+    shard_ffn: bool = True
+
+    # -------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.head_layers) + self.n_units * len(self.pattern) + len(self.tail_layers)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Reduced variant for CPU smoke tests: same family / same layer kinds,
+    # tiny dims (2 layers worth of pattern, d_model<=512, <=4 experts).
+    def smoke(self) -> "ModelConfig":
+        d = min(self.d_model, 128)
+        nh = min(self.n_heads, 4) if self.n_heads else 0
+        nkv = max(1, min(self.n_kv_heads, nh)) if self.n_heads else 0
+        kw = dict(
+            name=self.name + "-smoke",
+            d_model=d,
+            n_heads=nh,
+            n_kv_heads=nkv,
+            head_dim=(32 if self.n_heads else 0),
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_units=min(self.n_units, 2 if len(self.pattern) == 1 else 1),
+            head_layers=self.head_layers[:1],
+            tail_layers=self.tail_layers[:1],
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            moe_d_ff=min(self.moe_d_ff, 128) if self.moe_d_ff else 0,
+            shared_d_ff=min(self.shared_d_ff, 128) if self.shared_d_ff else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            rwkv_head_dim=32,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            n_frames=min(self.n_frames, 16),
+            n_prefix_tokens=min(self.n_prefix_tokens, 8),
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            max_seq_len=256,
+            default_particles=1,
+        )
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned (seq_len, global_batch) workload shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

@@ -1,0 +1,11 @@
+# The paper's primary contribution: the particle abstraction for BDL.
+# nel.py       — node event loop (particle->device table, active-set cache)
+# particle.py  — Particle (local state + messaging), ParticleModule
+# pd.py        — PushDistribution (P(nn_Theta) as a set of particles)
+# messages.py  — PFuture / ParticleView (async-await + read-only views)
+# functional.py— compiled stacked-particle fast path (beyond-paper)
+from .messages import PFuture, ParticleView, resolved, snapshot
+from .nel import NodeEventLoop
+from .particle import Particle, ParticleModule
+from .pd import PushDistribution
+from . import functional

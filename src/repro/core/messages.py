@@ -1,0 +1,77 @@
+"""Futures and message plumbing for the particle runtime (paper §3.2).
+
+``PFuture`` is the handle a particle receives when it ``send``s a message:
+the receiver executes the handler on its own timeline; the sender may
+``wait()`` (async-await side of the paper's blended concurrency model).
+
+``ParticleView`` is the result of ``particle.get(pid)...wait().view()``:
+a *read-only* snapshot of another particle's parameters (paper §3.2 —
+"view the result to obtain a read-only copy of a particle's parameters").
+Snapshots are decoupled from the owner's live state, so owners can keep
+updating concurrently (this is exactly why the paper's SVGD beats its
+monolithic baseline on 1 device, §5.1).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+
+
+class PFuture:
+    """Future for an asynchronously dispatched particle computation."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Any = None
+        self._exc: Optional[BaseException] = None
+
+    def _resolve(self, value: Any):
+        self._value = value
+        self._event.set()
+
+    def _reject(self, exc: BaseException):
+        self._exc = exc
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("PFuture.wait timed out")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+def resolved(value: Any) -> PFuture:
+    f = PFuture()
+    f._resolve(value)
+    return f
+
+
+class ParticleView:
+    """Read-only snapshot of a particle's parameters (+ optional grads)."""
+
+    __slots__ = ("_params", "_grads", "pid")
+
+    def __init__(self, pid: int, params, grads=None):
+        self.pid = pid
+        self._params = params
+        self._grads = grads
+
+    def view(self) -> "ParticleView":
+        return self
+
+    def parameters(self):
+        return self._params
+
+    def gradients(self):
+        return self._grads
+
+
+def snapshot(tree):
+    """Copy-on-read: jax arrays are immutable, so a structural copy suffices."""
+    return jax.tree.map(lambda x: x, tree)

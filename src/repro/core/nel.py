@@ -1,0 +1,145 @@
+"""Node Event Loop (paper §4.2) — the particle runtime.
+
+A NEL owns (1) a particle-to-device lookup table and (2) a context-
+switching dispatch mechanism with a per-device *active set* (the particle
+cache): at most ``cache_size`` particles are resident per device; others
+are swapped off the accelerator and paged back in on demand (LRU).
+
+Faithful-to-paper mechanics, adapted to JAX:
+  * "device" = a jax.Device. On this CPU container there is one physical
+    device; benchmarks fork subprocesses with
+    ``--xla_force_host_platform_device_count=N`` to emulate N devices, and
+    on a real TPU node the same code addresses the local TPU chips.
+  * message handlers run on a shared pool — each dispatch is one hop of a
+    particle's logical timeline (actor model). *Device* work (forward /
+    backward / parameter updates) additionally takes the target device's
+    lock, which serializes compute per device while letting different
+    devices progress concurrently (the paper's Fig. 3b: T4a/4b/4c overlap,
+    the device is locked at label 3 and freed at label 8).
+  * lightweight state reads (``get``/views) skip the device lock — the
+    paper's observation that same-device communication "can be eliminated".
+  * ``send`` returns immediately with a PFuture (async-await).
+
+Handlers may freely send-and-wait on other particles: nested dispatches
+run on their own pool threads, so a blocked handler never starves the
+particle it is waiting on (the paper gets the same property from its
+call-stack context switch).
+
+Instrumentation (`stats`) counts dispatches, swaps and cross-device
+transfers — the quantities the paper's §5 scaling discussion reasons about.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from .messages import PFuture
+
+
+class NodeEventLoop:
+    def __init__(self, num_devices: Optional[int] = None, cache_size: int = 4,
+                 offload: bool = False):
+        all_devices = jax.devices()
+        if num_devices is None:
+            num_devices = len(all_devices)
+        if num_devices > len(all_devices):
+            raise ValueError(
+                f"requested {num_devices} devices but only {len(all_devices)} present; "
+                "run under XLA_FLAGS=--xla_force_host_platform_device_count=N to emulate")
+        self.devices = all_devices[:num_devices]
+        self.cache_size = cache_size
+        self.offload = offload
+        # particle-to-device lookup table
+        self._device_of: Dict[int, int] = {}
+        self._particles: Dict[int, Any] = {}
+        # per-device active set (LRU particle cache) + device locks
+        self._active: List[OrderedDict] = [OrderedDict() for _ in range(num_devices)]
+        self._cache_locks = [threading.Lock() for _ in range(num_devices)]
+        self.device_locks = [threading.Lock() for _ in range(num_devices)]
+        self._next_pid = 0
+        self._threads: List[threading.Thread] = []
+        self._threads_lock = threading.Lock()
+        self.stats = {"dispatches": 0, "swaps_in": 0, "swaps_out": 0,
+                      "xdev_transfers": 0}
+        self._stats_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def register(self, particle, device: Optional[int] = None) -> int:
+        pid = self._next_pid
+        self._next_pid += 1
+        dev = device if device is not None else pid % len(self.devices)
+        self._device_of[pid] = dev
+        self._particles[pid] = particle
+        return pid
+
+    def device_of(self, pid: int) -> jax.Device:
+        return self.devices[self._device_of[pid]]
+
+    def particle_ids(self) -> List[int]:
+        return sorted(self._particles)
+
+    def particle(self, pid: int):
+        return self._particles[pid]
+
+    def _bump(self, key: str, n: int = 1):
+        with self._stats_lock:
+            self.stats[key] += n
+
+    # ------------------------------------------------------------------
+    # active-set / particle-cache management (paper's context switching)
+    # ------------------------------------------------------------------
+    def ensure_resident(self, pid: int):
+        dev_idx = self._device_of[pid]
+        dev = self.devices[dev_idx]
+        with self._cache_locks[dev_idx]:
+            active = self._active[dev_idx]
+            if pid in active:
+                active.move_to_end(pid)
+                return
+            if len(active) >= self.cache_size:
+                victim, _ = active.popitem(last=False)      # LRU evict
+                self._bump("swaps_out")
+                if self.offload:
+                    vp = self._particles[victim]
+                    vp.state["params"] = jax.device_get(vp.state["params"])
+            p = self._particles[pid]
+            if self.offload or len(self.devices) > 1:
+                p.state["params"] = jax.device_put(p.state["params"], dev)
+            active[pid] = True
+            self._bump("swaps_in")
+
+    # ------------------------------------------------------------------
+    # dispatch: one hop of particle `pid`'s timeline
+    # ------------------------------------------------------------------
+    def dispatch(self, pid: int, fn: Callable, *args,
+                 needs_device: bool = False, **kwargs) -> PFuture:
+        fut = PFuture()
+        dev_idx = self._device_of[pid]
+        self._bump("dispatches")
+
+        def run():
+            try:
+                if needs_device:
+                    with self.device_locks[dev_idx]:        # paper label 3/8
+                        self.ensure_resident(pid)
+                        fut._resolve(fn(*args, **kwargs))
+                else:
+                    fut._resolve(fn(*args, **kwargs))
+            except BaseException as e:  # surfaced on wait()
+                fut._reject(e)
+
+        t = threading.Thread(target=run, daemon=True)
+        with self._threads_lock:
+            self._threads = [th for th in self._threads if th.is_alive()]
+            self._threads.append(t)
+        t.start()
+        return fut
+
+    def shutdown(self):
+        with self._threads_lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout=30)

@@ -1,0 +1,135 @@
+"""The particle abstraction (paper §3.2).
+
+A particle wraps a NN with (1) local state — parameters, optimizer state,
+user state —, (2) its own logical thread of execution (dispatches run on
+its device's NEL worker), and (3) message passing: a receive dictionary
+mapping messages to locally-defined functions, plus send/get primitives
+returning PFutures.
+
+The paper's Fig. 1 `_gather` runs on this API verbatim (modulo torch->jax):
+
+    futures  = {pid: particle.get(pid) for pid in other_particles}
+    views    = {pid: fut.wait() for pid, fut in futures.items()}
+    views[other].view()
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .messages import ParticleView, PFuture, snapshot
+
+
+class ParticleModule:
+    """Bundle of pure functions defining the NN a particle wraps.
+
+    init(rng) -> params ; loss(params, batch) -> (scalar, metrics) ;
+    forward(params, batch) -> outputs.
+    """
+
+    def __init__(self, init: Callable, loss: Callable, forward: Callable,
+                 cfg: Any = None):
+        self.init = init
+        self.loss = loss
+        self.forward = forward
+        self.cfg = cfg
+        # jitted helpers shared by every particle of a PD
+        self._value_and_grad = jax.jit(
+            lambda p, b: jax.value_and_grad(lambda pp: loss(pp, b)[0])(p))
+        self._forward = jax.jit(forward)
+
+
+class Particle:
+    def __init__(self, pid: int, nel, module: ParticleModule, params,
+                 optimizer=None, opt_state=None, state: Optional[dict] = None):
+        self.pid = pid
+        self.nel = nel
+        self.module = module
+        self.optimizer = optimizer
+        self.state: Dict[str, Any] = dict(state or {})
+        self.state["params"] = params
+        self.state["opt_state"] = opt_state
+        self.state["grads"] = None
+        self.receive: Dict[str, Callable] = {}
+
+    # -- local state access ------------------------------------------------
+    def parameters(self):
+        return self.state["params"]
+
+    def gradients(self):
+        return self.state["grads"]
+
+    # -- registry ------------------------------------------------------------
+    def particle_ids(self) -> List[int]:
+        return self.nel.particle_ids()
+
+    def on(self, msg: str, fn: Callable):
+        self.receive[msg] = fn
+
+    # -- messaging (actor + async-await) ------------------------------------
+    def send(self, pid: int, msg: str, *args, **kwargs) -> PFuture:
+        """Trigger `msg`'s handler on particle `pid` (its own timeline)."""
+        target = self.nel.particle(pid)
+        if msg not in target.receive:
+            raise KeyError(f"particle {pid} has no handler for {msg!r}")
+        if self.nel._device_of[pid] != self.nel._device_of[self.pid]:
+            self.nel._bump("xdev_transfers")
+        fn = target.receive[msg]
+        return self.nel.dispatch(pid, fn, target, *args, **kwargs)
+
+    def get(self, pid: int) -> PFuture:
+        """Asynchronously snapshot particle `pid`'s parameters (read-only)."""
+        target = self.nel.particle(pid)
+        if self.nel._device_of[pid] != self.nel._device_of[self.pid]:
+            self.nel._bump("xdev_transfers")
+
+        def grab(_t):
+            return ParticleView(pid, snapshot(_t.state["params"]),
+                                None if _t.state["grads"] is None
+                                else snapshot(_t.state["grads"]))
+
+        return self.nel.dispatch(pid, grab, target)
+
+    # -- local NN computations (dispatched to this particle's device) -------
+    def step(self, batch) -> PFuture:
+        """Forward+backward+optimizer update on this particle's device."""
+
+        def do(_self):
+            loss, grads = _self.module._value_and_grad(_self.state["params"], batch)
+            _self.state["grads"] = grads
+            if _self.optimizer is not None:
+                p, s = _self.optimizer.update(_self.state["params"], grads,
+                                              _self.state["opt_state"])
+                _self.state["params"], _self.state["opt_state"] = p, s
+            return loss
+
+        return self.nel.dispatch(self.pid, do, self, needs_device=True)
+
+    def grad(self, batch) -> PFuture:
+        """Backward only: stash grads, do not update params (SVGD phase 1)."""
+
+        def do(_self):
+            loss, grads = _self.module._value_and_grad(_self.state["params"], batch)
+            _self.state["grads"] = grads
+            return loss
+
+        return self.nel.dispatch(self.pid, do, self, needs_device=True)
+
+    def forward(self, batch) -> PFuture:
+        def do(_self):
+            return _self.module._forward(_self.state["params"], batch)
+
+        return self.nel.dispatch(self.pid, do, self, needs_device=True)
+
+    def apply_update(self, update, lr: float) -> PFuture:
+        """theta <- theta - lr * update (SVGD follow; paper Fig. 6)."""
+
+        def do(_self):
+            _self.state["params"] = jax.tree.map(
+                lambda p, u: p - lr * u.astype(p.dtype),
+                _self.state["params"], update)
+            return None
+
+        return self.nel.dispatch(self.pid, do, self, needs_device=True)

@@ -1,0 +1,87 @@
+"""Push distribution (paper §3.3): P(nn_Theta) = (1/n) sum_i delta_{nn_theta_i}.
+
+A PD wraps an input NN (a ParticleModule) and encapsulates a set of
+particles created from it (the particle pushforward of Appendix A:
+p_create creates a particle via ppush). The PD owns the NEL.
+
+API mirrors the paper's Fig. 2:
+
+    pd = PushDistribution(module, num_devices=4, cache_size=4)
+    pids = [pd.p_create(optimizer=..., receive={"GATHER": _gather})
+            for _ in range(n)]
+    pd.p_wait([pd.p_launch(pids[0], "GATHER")])
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+from .messages import PFuture
+from .nel import NodeEventLoop
+from .particle import Particle, ParticleModule
+
+
+class PushDistribution:
+    def __init__(self, module: ParticleModule, *, num_devices: Optional[int] = None,
+                 cache_size: int = 4, view_size: int = 4, seed: int = 0,
+                 offload: bool = False):
+        self.module = module
+        self.nel = NodeEventLoop(num_devices=num_devices, cache_size=cache_size,
+                                 offload=offload)
+        self.view_size = view_size
+        self._rng = jax.random.PRNGKey(seed)
+        self.particles: Dict[int, Particle] = {}
+
+    # ------------------------------------------------------------------
+    def _next_rng(self):
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def p_create(self, optimizer=None, *, device: Optional[int] = None,
+                 receive: Optional[Dict[str, Callable]] = None,
+                 state: Optional[dict] = None, params=None) -> int:
+        """Create one particle (replicate the input NN with fresh init)."""
+        if params is None:
+            params = self.module.init(self._next_rng())
+        opt_state = optimizer.init(params) if optimizer is not None else None
+        pid = self.nel.register(None, device=device)
+        p = Particle(pid, self.nel, self.module, params, optimizer, opt_state,
+                     state=state)
+        for msg, fn in (receive or {}).items():
+            p.on(msg, fn)
+        self.nel._particles[pid] = p
+        self.particles[pid] = p
+        return pid
+
+    def p_launch(self, pid: int, msg: str, *args, **kwargs) -> PFuture:
+        p = self.particles[pid]
+        if msg not in p.receive:
+            raise KeyError(f"particle {pid} has no handler for {msg!r}")
+        return self.nel.dispatch(pid, p.receive[msg], p, *args, **kwargs)
+
+    @staticmethod
+    def p_wait(futures: Sequence[PFuture]) -> List[Any]:
+        return [f.wait() for f in futures]
+
+    def p_params(self, pid: int):
+        return self.particles[pid].parameters()
+
+    def particle_ids(self) -> List[int]:
+        return self.nel.particle_ids()
+
+    # -- ensemble-style prediction over all particles -----------------------
+    def p_predict(self, batch):
+        """hat f(x) = (1/n) sum_i nn_{theta_i}(x) (paper §3.4)."""
+        futs = [self.particles[pid].forward(batch) for pid in self.particle_ids()]
+        outs = [f.wait() for f in futs]
+        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)
+
+    def cleanup(self):
+        self.nel.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.cleanup()

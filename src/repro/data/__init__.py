@@ -1,0 +1,2 @@
+from .loader import DataLoader
+from . import synthetic

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot spots:
+#   svgd_rbf.py      — pairwise sqdist + SVGD force over (n_particles, D)
+#   swag_moments.py  — fused SWAG running-moment update
+#   attention.py     — blocked online-softmax (flash) prefill attention
+#   decode_attention.py — single-token decode over a (ring) KV cache
+# ops.py: jit'd wrappers (interpret on CPU, compiled on TPU)
+# ref.py: pure-jnp oracles (allclose targets for tests)
+from . import attention, decode_attention, ops, ref, svgd_rbf, swag_moments

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container every kernel runs in interpret mode (the kernel body
+executed in Python/XLA:CPU, numerically identical to the TPU lowering);
+on a TPU backend `interpret` flips to False automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as _attention
+from . import decode_attention as _decode
+from . import svgd_rbf as _svgd
+from . import swag_moments as _swag
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def pairwise_sqdist(theta, block_d: int = _svgd.DEFAULT_BLOCK_D):
+    return _svgd.pairwise_sqdist(theta, block_d=block_d, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def svgd_force(theta, grads, lengthscale, block_d: int = _svgd.DEFAULT_BLOCK_D):
+    return _svgd.svgd_force(theta, grads, lengthscale, block_d=block_d,
+                            interpret=_interpret())
+
+
+@jax.jit
+def swag_update_moments(mean, sq_mean, params, n):
+    return _swag.update_moments(mean, sq_mean, params, n)
+
+
+@partial(jax.jit, static_argnames=("causal", "q_block", "k_block"))
+def flash_attention(q, k, v, causal: bool = True, q_block: int = 128,
+                    k_block: int = 128):
+    return _attention.flash_attention(q, k, v, causal=causal, q_block=q_block,
+                                      k_block=k_block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("c_block",))
+def decode_attention(q, k_cache, v_cache, k_pos, c_block: int = 512):
+    return _decode.decode_attention(q, k_cache, v_cache, k_pos,
+                                    c_block=c_block, interpret=_interpret())

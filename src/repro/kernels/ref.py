@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(theta):
+    sq = jnp.sum(theta * theta, axis=1)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * theta @ theta.T, 0.0)
+
+
+def svgd_force(theta, grads, lengthscale):
+    n = theta.shape[0]
+    ell2 = jnp.asarray(lengthscale, jnp.float32) ** 2
+    d2 = pairwise_sqdist(theta) * (1.0 - jnp.eye(n))
+    K = jnp.exp(-0.5 * d2 / ell2)
+    ksum = K.sum(axis=0)
+    attract = K.T @ grads
+    repulse = (ksum[:, None] * theta - K.T @ theta) / ell2
+    return (attract - repulse) / n
+
+
+def swag_moments(mean, sq_mean, params, n):
+    new_mean = (mean * n + params) / (n + 1)
+    new_sq = (sq_mean * n + params * params) / (n + 1)
+    return new_mean, new_sq
+
+
+def flash_attention(q, k, v, *, causal=True):
+    """q: (B, S, H, hd); k, v: (B, S, KVH, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qq = q.reshape(B, S, KVH, G, hd)
+    s = jnp.einsum("bqngh,bknh->bngqk", qq, k).astype(jnp.float32) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bngqk,bknh->bngqh", p, v)
+    return jnp.moveaxis(o, 3, 1).reshape(B, S, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, k_pos):
+    """q: (B,1,H,hd); caches (B,C,KVH,hd); k_pos (B,C) -> (B,1,H,hd)."""
+    import math
+    B, _, H, hd = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    qq = (q[:, 0] / math.sqrt(hd)).reshape(B, KVH, G, hd)
+    s = jnp.einsum("bngh,bknh->bngk", qq, k_cache).astype(jnp.float32)
+    s = jnp.where((k_pos >= 0)[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bngk,bknh->bngh", p, v_cache)
+    return o.reshape(B, 1, H, hd)

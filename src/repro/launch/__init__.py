@@ -1,0 +1,3 @@
+# launch: production-mesh factories, run plans, step builders, dry-run CLI.
+# NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time.
+from . import mesh, plans

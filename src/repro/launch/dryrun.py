@@ -1,0 +1,162 @@
+"""Multi-pod dry run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and extract roofline inputs.
+
+MUST be the first import side effect: 512 placeholder host devices so
+jax.make_mesh can build the production mesh (jax locks the device count on
+first init — do not move these lines).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from .. import configs as configs_mod
+from ..configs import INPUT_SHAPES
+from .mesh import make_production_mesh
+from .plans import plan_for
+from . import steps as steps_mod
+
+_DTYPE_BYTES = {"pred": 0.125, "s4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+                "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u1": 0.125}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\])\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output bytes of every collective op in the optimized HLO,
+    bucketed by op kind. (Per-device program -> per-device bytes.)"""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if tuple_part is not None:
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            b = _shape_bytes(dtype, dims)
+        out[kind] = out.get(kind, 0.0) + b
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            bdl: str = "ensemble"):
+    cfg = configs_mod.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = configs_mod.is_skipped(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": skip}
+    plan = plan_for(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "bdl": bdl,
+           "mesh": "multi" if multi_pod else "single",
+           "particles": plan.particles, "mode": plan.mode,
+           "microbatches": plan.microbatches, "param_dtype": plan.param_dtype}
+    try:
+        with jax.set_mesh(mesh):
+            step, args, shardings = steps_mod.build(cfg, shape, plan, mesh,
+                                                     bdl=bdl)
+            # donate the large persistent state (params/opt for train, the KV
+            # cache for decode) — production steps alias these buffers
+            donate = {"train": (0, 1), "decode": (2,), "prefill": ()}[shape.kind]
+            if shape.kind == "train" and bdl == "svgd":
+                donate = (0,)
+            lowered = jax.jit(step, in_shardings=shardings,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        # loop-aware cost model: compiled.cost_analysis() does not multiply
+        # while(scan) body costs by trip count -> use hlo_cost (see module)
+        from . import hlo_cost as hc
+        loopc = hc.cost(hlo_text)
+        coll = {k: v for k, v in loopc["coll"].items() if v > 0}
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "flops_per_device": loopc["flops"],
+            "bytes_per_device": loopc["bytes"],
+            "collective_bytes_per_device": coll,
+            "raw_flops_per_device": float(cost.get("flops", -1)) if cost else -1,
+            "raw_collective_bytes": collective_bytes(hlo_text),
+            "memory": {k: getattr(mem, k, None) for k in
+                       ("argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "generated_code_size_in_bytes")}
+                      if mem is not None else None,
+        })
+        if verbose:
+            print(f"[{arch} x {shape_name} x {rec['mesh']}] OK "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll={ {k: f'{v/1e9:.2f}GB' for k, v in coll.items()} }")
+            if mem is not None:
+                print(f"  memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+                      f"out={mem.output_size_in_bytes/1e9:.2f}GB "
+                      f"temp={mem.temp_size_in_bytes/1e9:.2f}GB")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[{arch} x {shape_name} x {rec['mesh']}] FAIL: "
+                  f"{type(e).__name__}: {str(e)[:500]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--bdl", default="ensemble",
+                    choices=["ensemble", "svgd", "multiswag"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = sorted(configs_mod.ARCHS) if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                if args.bdl != "ensemble":
+                    tag += f"__{args.bdl}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[{tag}] exists, skipping")
+                    continue
+                rec = run_one(arch, shape, mp, bdl=args.bdl)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""Loop-aware cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` does NOT multiply costs inside ``while``
+bodies by their trip counts, so for scan-over-layers models it
+under-counts FLOPs / bytes / collective traffic by the layer count (and by
+the microbatch count, and the loss-chunk count). This module parses the
+optimized HLO text and accumulates:
+
+  * dot FLOPs          2 * prod(out_dims) * prod(lhs contracting dims)
+  * HBM bytes          operand+output bytes of dot / fusion / gather /
+                       scatter / dyn-slice / collective call sites
+                       (elementwise chains inside a fusion stay in
+                       registers/VMEM and are not double-counted)
+  * collective bytes   max(in, out) bytes per collective op, by kind
+
+multiplying everything inside a ``while`` by its trip count (read from the
+largest integer constant in the loop's condition computation — how XLA
+materializes lax.scan limits).
+
+This is the per-device program, so all numbers are per-device.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTB = {"pred": 0.125, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2,
+        "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+        "f8e5m2": 1, "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8,
+        "c128": 16, "u1": 0.125, "token": 0}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s+(%[\w\.\-]+) = (.+?) ([\w\-]+)\((.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY )?(%[\w\.\-]+) \((.*)\) -> ")
+
+
+def _shape_of(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return None
+    dtype, dims = m.group(1), m.group(2)
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _bytes_of(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTB.get(dtype, 4)
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: List[Tuple[str, str, str, List[str], str]] = []
+        self.shapes: Dict[str, Tuple[str, List[int]]] = {}
+
+    def add_param(self, decl: str):
+        # "x.12: f32[]" or "param_0.1: (f32[2], s32[])"
+        if ":" not in decl:
+            return
+        name, t = decl.split(":", 1)
+        sh = _shape_of(t.strip())
+        if sh:
+            self.shapes["%" + name.strip().lstrip("%")] = sh
+
+
+def parse(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and line.rstrip().endswith("{"):
+            cur = Computation(h.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            for decl in _split_params(h.group(2)):
+                cur.add_param(decl)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        operands, attrs = _split_call(rest)
+        sh = _shape_of(type_str)
+        if sh:
+            cur.shapes[name] = sh
+        cur.ops.append((name, type_str, opcode, operands, attrs))
+    return comps, entry
+
+
+def _split_params(s: str) -> List[str]:
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    if s[start:].strip():
+        out.append(s[start:])
+    return out
+
+
+def _split_call(rest: str) -> Tuple[List[str], str]:
+    """rest = 'operands...), attr=..., ...' -> (operand names, attrs str)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = rest[:i], rest[i + 1:]
+                ops = [t.strip() for t in _split_params(inner)]
+                names = [t for t in ops if t.startswith("%")]
+                # keep the raw call payload in front of attrs: constant
+                # literals (trip counts) live there
+                return names, inner + " ## " + attrs
+    return [], rest
+
+
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop limit = the largest integer constant in the condition
+    computation (how XLA materializes lax.scan trip counts). Constants
+    print as ``%c = s32[] constant(24)`` — the literal lands at the start
+    of what _split_call returns as `attrs` (there are no %operands)."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for _name, _type, opcode, _ops, attrs in comp.ops:
+        if opcode == "constant":
+            m = re.match(r"\s*(\d+)", attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+# ops whose operand/output streams dominate HBM traffic. Slice-like ops
+# (gather/scatter/dyn-slice/dus) move only the slice: XLA updates the big
+# aliased buffer in place, so we count 2x the smallest participating
+# shape, not the buffer.
+_STREAM_OPS = {"dot", "convolution"} | set(COLLECTIVES)
+_SLICE_OPS = {"gather", "scatter", "dynamic-slice", "dynamic-update-slice"}
+
+
+def cost(hlo: str) -> Dict:
+    comps, entry = parse(hlo)
+    memo: Dict[str, Dict] = {}
+
+    def comp_cost(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = {"flops": 0.0, "bytes": 0.0,
+                      "coll": {k: 0.0 for k in COLLECTIVES}}  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        total = {"flops": 0.0, "bytes": 0.0,
+                 "coll": {k: 0.0 for k in COLLECTIVES}}
+
+        def add(sub: Dict, mult: float = 1.0):
+            total["flops"] += sub["flops"] * mult
+            total["bytes"] += sub["bytes"] * mult
+            for k in COLLECTIVES:
+                total["coll"][k] += sub["coll"][k] * mult
+
+        for op_name, type_str, opcode, operands, attrs in comp.ops:
+            base = opcode.replace("-start", "")
+            if base == "while":
+                m_c = re.search(r"condition=(%[\w\.\-]+)", attrs)
+                m_b = re.search(r"body=(%[\w\.\-]+)", attrs)
+                trips = trip_count(comps, m_c.group(1)) if m_c else 1
+                if m_b:
+                    add(comp_cost(m_b.group(1)), trips)
+                continue
+            called = re.findall(r"(?:calls|to_apply|branch_computations)="
+                                r"\{?(%[\w\.\-]+)", attrs)
+            for c in called:
+                add(comp_cost(c))
+            if base == "dot":
+                out_b = _bytes_of(type_str)
+                osh = _shape_of(type_str)
+                k = 1
+                mlhs = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+                lhs_sh = comp.shapes.get(operands[0]) if operands else None
+                if mlhs and lhs_sh:
+                    for d in mlhs.group(1).split(","):
+                        if d:
+                            k *= lhs_sh[1][int(d)]
+                n_out = 1
+                if osh:
+                    for d in osh[1]:
+                        n_out *= d
+                total["flops"] += 2.0 * n_out * k
+            if base in COLLECTIVES:
+                out_b = _bytes_of(type_str)
+                in_b = 0.0
+                for o in operands:
+                    if o in comp.shapes:
+                        dt, dims = comp.shapes[o]
+                        n = 1
+                        for d in dims:
+                            n *= d
+                        in_b += n * _DTB.get(dt, 4)
+                total["coll"][base] += max(out_b, in_b)
+            def _op_bytes(o):
+                if o not in comp.shapes:
+                    return 0.0
+                dt, dims = comp.shapes[o]
+                n = 1
+                for d in dims:
+                    n *= d
+                return n * _DTB.get(dt, 4)
+
+            if base in _STREAM_OPS:
+                total["bytes"] += _bytes_of(type_str) + sum(
+                    _op_bytes(o) for o in operands)
+            elif base in _SLICE_OPS:
+                sizes = [s for s in ([_bytes_of(type_str)] +
+                                     [_op_bytes(o) for o in operands]) if s > 0]
+                if sizes:
+                    total["bytes"] += 2.0 * min(sizes)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0,
+                "coll": {k: 0.0 for k in COLLECTIVES}}
+    return comp_cost(entry)
+
+
+def top_collectives(hlo: str, k: int = 12):
+    """Largest collective call sites: (kind, bytes*trips, trips, op_name).
+
+    The op_name metadata pinpoints the jaxpr source (e.g. which einsum or
+    transpose produced the gather) — the hillclimb's profiling signal.
+    """
+    comps, entry = parse(hlo)
+    # compute loop multiplier of every computation reachable from entry
+    mult: Dict[str, float] = {}
+
+    def walk(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps[name]
+        for _n, _t, opcode, _o, attrs in comp.ops:
+            called = re.findall(r"(?:calls|to_apply|branch_computations)="
+                                r"\{?(%[\w\.\-]+)", attrs)
+            if opcode == "while":
+                m_c = re.search(r"condition=(%[\w\.\-]+)", attrs)
+                m_b = re.search(r"body=(%[\w\.\-]+)", attrs)
+                trips = trip_count(comps, m_c.group(1)) if m_c else 1
+                if m_b:
+                    walk(m_b.group(1), m * trips)
+            else:
+                for c in called:
+                    walk(c, m)
+
+    if entry:
+        walk(entry, 1.0)
+    rows = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for op_name, type_str, opcode, operands, attrs in comp.ops:
+            base = opcode.replace("-start", "")
+            if base not in COLLECTIVES:
+                continue
+            b = _bytes_of(type_str)
+            meta = re.search(r'op_name="([^"]+)"', attrs)
+            rows.append((base, b * m, int(m), b,
+                         meta.group(1) if meta else op_name))
+    rows.sort(key=lambda r: -r[1])
+    return rows[:k]

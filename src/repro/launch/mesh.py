@@ -1,0 +1,21 @@
+"""Production mesh factory (functions only — importing never touches jax
+device state; the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_bench_mesh(n_devices: int, model: int = 1):
+    """Small mesh for CPU benchmarks (forced host devices)."""
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,404 @@
+"""Step builders + abstract input specs for the multi-pod dry run.
+
+Everything here works on ShapeDtypeStructs (no allocation): abstract
+params/optimizer/cache trees via jax.eval_shape, sharding trees via
+sharding.rules, and jit-able step functions:
+
+  train_step(params, opt, batch)   -> (params, opt, loss)     [train_4k]
+  prefill_step(params, batch)      -> (logits, caches)        [prefill_32k]
+  serve_step(params, token, caches, pos) -> (logits, caches)  [decode_*]
+
+Particle axis (the paper's technique): vmap with spmd_axis_name so the
+particle axis shards over `data` and all internal sharding constraints
+compose (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs as configs_mod
+from ..configs import ModelConfig, InputShape
+from ..models import api
+from ..optim import make_optimizer
+from ..sharding import rules
+from ..sharding.policy import activation_policy
+from .plans import RunPlan
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# abstract state builders
+# --------------------------------------------------------------------------
+
+def _cast_tree(tree, dtype):
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype) \
+                if isinstance(x, jax.ShapeDtypeStruct) else x.astype(dtype)
+        return x
+    return jax.tree.map(cast, tree)
+
+
+def abstract_params(cfg: ModelConfig, plan: RunPlan):
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if plan.particles > 1:
+        def initp(r):
+            return jax.vmap(lambda k: api.init_params(k, cfg))(
+                jax.random.split(r, plan.particles))
+    else:
+        def initp(r):
+            return api.init_params(r, cfg)
+    tree = jax.eval_shape(initp, rng)
+    return _cast_tree(tree, jnp.dtype(plan.param_dtype))
+
+
+def abstract_opt_state(cfg: ModelConfig, plan: RunPlan, params_abs):
+    opt = make_optimizer(cfg.optimizer, 1e-3)
+    if plan.particles > 1:
+        return jax.eval_shape(jax.vmap(opt.init), params_abs)
+    return jax.eval_shape(opt.init, params_abs)
+
+
+def abstract_cache(cfg: ModelConfig, plan: RunPlan, batch: int, seq_len: int):
+    def mk():
+        return api.init_cache(cfg, batch, seq_len, dtype=CACHE_DTYPE)
+    tree = jax.eval_shape(mk)
+    if plan.particles > 1:
+        tree = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((plan.particles,) + x.shape, x.dtype),
+            tree)
+    return tree
+
+
+def abstract_batch(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                             jnp.bfloat16)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct((B, cfg.n_prefix_tokens, cfg.d_model),
+                                              jnp.bfloat16)
+    return out
+
+
+# --------------------------------------------------------------------------
+# sharding spec builders
+# --------------------------------------------------------------------------
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0 and n >= mesh.shape[axis]
+
+
+def batch_specs(cfg, plan, mesh, batch_abs):
+    multi = "pod" in mesh.shape
+    if plan.particle_axis is None:  # batch owns the data axis
+        bspec = ("pod", "data") if multi else ("data",)
+    else:                           # particle-parallel: data carries particles
+        bspec = ("pod",) if multi else (None,)
+    def fit(n, axes):
+        """Longest prefix of mesh axes whose size product divides n."""
+        out, prod = [], 1
+        for ax in axes:
+            if ax is None:
+                continue
+            if n % (prod * mesh.shape[ax]) == 0:
+                out.append(ax)
+                prod *= mesh.shape[ax]
+        if not out:
+            return None
+        return tuple(out) if len(out) > 1 else out[0]
+
+    specs = {}
+    for k, v in batch_abs.items():
+        if k in ("tokens", "labels"):
+            specs[k] = P(fit(v.shape[0], bspec))
+        else:  # frames/patches: big float inputs — also try the model axis
+            specs[k] = P(fit(v.shape[0], tuple(bspec) + ("model",)), None, None)
+    return specs
+
+
+def cache_specs(cfg, plan, mesh, cache_abs, batch: int):
+    """Sequence-sharded KV caches: B->data (if divisible), S->model."""
+    b_ax = "data" if _div(batch, mesh, "data") else None
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    specs = []
+    for path, leaf in flat:
+        pstr = rules.normalize_path(path)
+        nd = len(leaf.shape)
+        name = pstr.rsplit("/", 1)[-1]
+        if name in ("k", "v"):
+            C = leaf.shape[-3]
+            tail = (b_ax, "model" if _div(C, mesh, "model") else None, None, None)
+        elif name == "pos":
+            C = leaf.shape[-1]
+            tail = (b_ax, "model" if _div(C, mesh, "model") else None)
+        elif name in ("xk", "xv"):
+            tail = (b_ax, None, None, None)
+        elif name == "ssm":
+            H = leaf.shape[-3]
+            tail = (b_ax, "model" if _div(H, mesh, "model") else None, None, None)
+        elif name == "state":
+            H = leaf.shape[-3]
+            tail = (b_ax, "model" if _div(H, mesh, "model") else None, None, None)
+        elif name == "conv":
+            tail = (b_ax, None, None)
+        elif name.startswith("x_last"):
+            tail = (b_ax, None)
+        else:
+            tail = (None,) * nd
+        lead = (None,) * (nd - len(tail))
+        specs.append(P(*lead, *tail))
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def residual_policy(cfg, plan, mesh):
+    """Activation policy for full-seq passes (Megatron-SP style)."""
+    multi = "pod" in mesh.shape
+    if plan.particle_axis is None:
+        b = ("pod", "data") if multi else "data"
+        moe_c = "data"      # MoE capacity axis can use the data axis
+    else:
+        b = "pod" if multi else None
+        moe_c = None        # data axis carries particles (spmd vmap)
+    return {
+        "__mesh__": dict(mesh.shape),
+        "residual": P(b, "model", None),        # (B, S, D): sequence-sharded
+        "logits": P(b, None, "model"),          # (B, chunk, V): vocab-sharded
+        "moe_buffer": P("model", moe_c, None),  # (E, C, *): expert-parallel
+        "moe_tokens": P(moe_c, None),            # (T*k, D) combine path
+        # flash-attention layout: heads on `model`, sequence local — one
+        # resharding per layer instead of one gather per flash block
+        "attn_heads": P(b, None, "model", None),
+        "attn_kv": P(b, None, "model", None),
+        "ssm_heads": P(b, None, "model", None),  # rwkv/mamba chunk streams
+    }
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def _tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def make_train_step(cfg: ModelConfig, plan: RunPlan, mesh):
+    opt = make_optimizer(cfg.optimizer, 1e-3)
+    loss_fn = functools.partial(api.loss_fn, cfg=cfg)
+    policy = residual_policy(cfg, plan, mesh)
+
+    def single(params, opt_state, batch):
+        with activation_policy(policy):
+            if plan.microbatches == 1:
+                (loss, _), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, batch), has_aux=True)(params)
+            else:
+                mb = plan.microbatches
+                split = jax.tree.map(
+                    lambda a: a.reshape((mb, a.shape[0] // mb) + a.shape[1:]),
+                    batch)
+
+                def body(acc, b):
+                    (l, _), g = jax.value_and_grad(
+                        lambda p: loss_fn(p, b), has_aux=True)(params)
+                    return _tree_add(acc, jax.tree.map(
+                        lambda x: x.astype(jnp.float32), g)), l
+
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                grads, losses = lax.scan(body, g0, split)
+                grads = jax.tree.map(lambda g: (g / mb), grads)
+                loss = losses.mean()
+            new_p, new_s = opt.update(params, jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads, params), opt_state)
+            return new_p, new_s, loss
+
+    if plan.particles > 1:
+        step = jax.vmap(single, in_axes=(0, 0, None),
+                        spmd_axis_name=plan.particle_axis)
+    else:
+        step = single
+    return step
+
+
+def make_svgd_train_step(cfg: ModelConfig, plan: RunPlan, mesh,
+                         lr: float = 1e-3, lengthscale: float = 1.0):
+    """SVGD over the particle axis at production scale (the paper's own
+    algorithm as a launch mode): per-particle grads (vmap over the particle
+    mesh axis), then the RBF kernel force over the flattened (P, D)
+    parameter matrix — the all-to-all the paper identifies as SVGD's
+    bottleneck (§5.1), visible as collective bytes in the dry run."""
+    from jax.flatten_util import ravel_pytree
+    from ..bdl.svgd import svgd_force
+    loss_fn = functools.partial(api.loss_fn, cfg=cfg)
+    policy = residual_policy(cfg, plan, mesh)
+
+    def single_grad(params, batch):
+        with activation_policy(policy):
+            if plan.microbatches == 1:
+                (loss, _), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, batch), has_aux=True)(params)
+                return loss, g
+            mb = plan.microbatches
+            split = jax.tree.map(
+                lambda a: a.reshape((mb, a.shape[0] // mb) + a.shape[1:]),
+                batch)
+
+            def body(acc, b):
+                (l, _), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, b), has_aux=True)(params)
+                return _tree_add(acc, jax.tree.map(
+                    lambda x: x.astype(jnp.float32), g)), l
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            grads, losses = lax.scan(body, g0, split)
+            return losses.mean(), jax.tree.map(lambda g: g / mb, grads)
+
+    def step(stacked_params, batch):
+        losses, grads = jax.vmap(single_grad, in_axes=(0, None),
+                                 spmd_axis_name=plan.particle_axis)(
+            stacked_params, batch)
+        one = jax.tree.map(lambda x: x[0], stacked_params)
+        _, unravel = ravel_pytree(one)
+        theta = jax.vmap(lambda t: ravel_pytree(t)[0])(stacked_params)
+        g = jax.vmap(lambda t: ravel_pytree(t)[0])(grads)
+        # (P, D): particles over `data`, flattened params over `model`
+        if theta.shape[1] % mesh.shape["model"] == 0:
+            wide = NamedSharding(mesh, P(plan.particle_axis, "model"))
+            theta = jax.lax.with_sharding_constraint(theta, wide)
+            g = jax.lax.with_sharding_constraint(g, wide)
+        phi = svgd_force(theta.astype(jnp.float32), g.astype(jnp.float32),
+                         lengthscale)
+        new_theta = theta - lr * phi.astype(theta.dtype)
+        return jax.vmap(unravel)(new_theta), losses
+
+    return step
+
+
+def make_multiswag_train_step(cfg: ModelConfig, plan: RunPlan, mesh,
+                              max_rank: int = 4):
+    """Ensemble step + per-particle SWAG moment collection (multi-SWAG as a
+    launch mode; moments are particle-local — the paper's argument for why
+    multi-SWAG scales like deep ensembles)."""
+    from ..bdl.swag import swag_collect
+    base = make_train_step(cfg, plan, mesh)
+
+    def step(params, opt_state, swag_state, batch):
+        new_p, new_s, loss = base(params, opt_state, batch)
+        new_sw = jax.vmap(lambda st, p: swag_collect(st, p, use_kernel=False)
+                          )(swag_state, new_p)
+        return new_p, new_s, new_sw, loss
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, plan: RunPlan, mesh):
+    policy = residual_policy(cfg, plan, mesh)
+
+    def single(params, batch):
+        with activation_policy(policy):
+            return api.prefill(params, batch, cfg)
+
+    if plan.particles > 1:
+        vm = jax.vmap(single, in_axes=(0, None),
+                      spmd_axis_name=plan.particle_axis)
+
+        def step(params, batch):
+            logits, caches = vm(params, batch)
+            return jnp.mean(logits.astype(jnp.float32), axis=0), caches
+        return step
+    return single
+
+
+def make_serve_step(cfg: ModelConfig, plan: RunPlan, mesh):
+    policy = residual_policy(cfg, plan, mesh)
+
+    def single(params, token, caches, cur_pos):
+        with activation_policy(policy):
+            return api.decode_step(params, token, caches, cur_pos, cfg)
+
+    if plan.particles > 1:  # replicated serve ensemble (logit averaging)
+        vm = jax.vmap(single, in_axes=(0, None, 0, None))
+
+        def step(params, token, caches, cur_pos):
+            logits, caches = vm(params, token, caches, cur_pos)
+            return jnp.mean(logits.astype(jnp.float32), axis=0), caches
+        return step
+    return single
+
+
+# --------------------------------------------------------------------------
+# top-level: abstract args + shardings per (cfg, shape, plan, mesh)
+# --------------------------------------------------------------------------
+
+def build(cfg: ModelConfig, shape: InputShape, plan: RunPlan, mesh,
+          bdl: str = "ensemble"):
+    """Returns (step_fn, abstract_args tuple, in_shardings tuple).
+
+    bdl selects the train-step algorithm: "ensemble" (independent
+    particles), "svgd" (all-to-all kernel force over the particle axis) or
+    "multiswag" (ensemble + particle-local SWAG moments)."""
+    cfg = cfg.replace(remat=(shape.kind == "train"), dtype="bfloat16")
+    params_abs = abstract_params(cfg, plan)
+    p_shard = rules.tree_shardings(mesh, params_abs, plan.mode,
+                                   plan.particle_axis)
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        batch_abs = abstract_batch(cfg, shape)
+        b_shard = ns(batch_specs(cfg, plan, mesh, batch_abs))
+        if bdl in ("svgd", "multiswag") and plan.particles < 2:
+            raise ValueError(f"{bdl} needs a particle axis (P>1); "
+                             f"{cfg.name} runs P={plan.particles}")
+        if bdl == "svgd":
+            step = make_svgd_train_step(cfg, plan, mesh)
+            return step, (params_abs, batch_abs), (p_shard, b_shard)
+        opt_abs = abstract_opt_state(cfg, plan, params_abs)
+        o_shard = rules.tree_shardings(mesh, opt_abs, plan.mode,
+                                       plan.particle_axis)
+        if bdl == "multiswag":
+            from ..bdl.swag import swag_state_init
+            one = jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+                x.shape[1:], x.dtype), params_abs) if plan.particles > 1 \
+                else params_abs
+            sw_abs = jax.eval_shape(
+                lambda: jax.vmap(lambda _: swag_state_init(one, 4))(
+                    jnp.arange(max(plan.particles, 1))))
+            sw_shard = rules.tree_shardings(mesh, sw_abs, plan.mode,
+                                            plan.particle_axis)
+            step = make_multiswag_train_step(cfg, plan, mesh)
+            return step, (params_abs, opt_abs, sw_abs, batch_abs), \
+                (p_shard, o_shard, sw_shard, b_shard)
+        step = make_train_step(cfg, plan, mesh)
+        return step, (params_abs, opt_abs, batch_abs), (p_shard, o_shard, b_shard)
+
+    if shape.kind == "prefill":
+        batch_abs = abstract_batch(cfg, shape)
+        batch_abs.pop("labels")
+        b_shard = ns(batch_specs(cfg, plan, mesh, batch_abs))
+        step = make_prefill_step(cfg, plan, mesh)
+        return step, (params_abs, batch_abs), (p_shard, b_shard)
+
+    # decode: one new token against a seq_len cache
+    B = shape.global_batch
+    cache_abs = abstract_cache(cfg, plan, B, shape.seq_len)
+    c_shard = ns(cache_specs(cfg, plan, mesh, cache_abs, B))
+    token_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    t_shard = NamedSharding(mesh, P("data" if _div(B, mesh, "data") else None))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    step = make_serve_step(cfg, plan, mesh)
+    return step, (params_abs, token_abs, cache_abs, pos_abs), \
+        (p_shard, t_shard, c_shard, pos_shard)

@@ -1,0 +1,1 @@
+from . import api, blocks, moe, rwkv, mamba, transformer, vit, unet1d

@@ -1,0 +1,417 @@
+"""Core NN blocks: norms, RoPE, GQA attention (chunked/flash + decode), MLPs.
+
+All blocks are pure functions over parameter pytrees (plain dicts) so they
+compose with vmap (particle axis), pjit (mesh sharding) and lax.scan
+(layer stacking). No framework dependency.
+
+Attention never materializes an (Sq, Sk) score matrix for the full
+sequence: training/prefill use a double-chunked online-softmax scan
+(flash-attention structurally, in pure jnp — the Pallas VMEM-tiled version
+for TPU lives in repro.kernels.attention and is numerically checked
+against this one), decode uses a single-query pass over the KV cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding.policy import maybe_shard
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float = 1.0):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (scale / math.sqrt(d_in))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(kind: str, d: int):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_apply(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:            # RMSNorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq          # (..., S, half)
+    ang = ang[..., :, None, :]                                        # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention masks (built per chunk — never (S, S) for the full sequence)
+# --------------------------------------------------------------------------
+
+def _chunk_mask(kind: str, q_pos, k_pos, *, window: int = 0, prefix_len=0):
+    """q_pos: (qc,), k_pos: (kc,) -> bool (qc, kc) allowed."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    if kind == "bidir":
+        return jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    causal = k <= q
+    if kind == "causal":
+        return causal
+    if kind == "sliding":
+        return causal & (k > q - window)
+    if kind == "prefix":
+        return causal | (k < prefix_len)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# flash attention (pure-jnp, double-chunked online softmax)
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _fa_fwd_impl(q, k, v, kind, window, prefix_len, q_offset, softcap,
+                 q_chunk, k_chunk):
+    """Padded-shape flash forward. Returns (out (B,Sqp,H,hd), L (B,KVH,G,Sqp))
+    with L = logsumexp of the score rows (the flash softmax stats)."""
+    B, Sqp, H, hd = q.shape
+    Skp, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = Sqp // q_chunk, Skp // k_chunk
+    qg = q.reshape(B, nq, q_chunk, KVH, G, hd)
+    kg = k.reshape(B, nk, k_chunk, KVH, hd)
+    vg = v.reshape(B, nk, k_chunk, KVH, hd)
+
+    def one_q_chunk(qi):
+        qq = qg[:, qi] * scale                       # (B, qc, KVH, G, hd)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kk = lax.dynamic_index_in_dim(kg, ki, 1, keepdims=False)
+            vv = lax.dynamic_index_in_dim(vg, ki, 1, keepdims=False)
+            s = jnp.einsum("bqngh,bknh->bngqk", qq, kk).astype(jnp.float32)
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            mask = _chunk_mask(kind, q_pos, k_pos, window=window,
+                               prefix_len=prefix_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))                 # (B,KVH,G,qc)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bngqk,bknh->bngqh", p.astype(vv.dtype), vv)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        lsafe = jnp.maximum(l, 1e-30)
+        out = (acc / lsafe[..., None]).astype(q.dtype)
+        L = m + jnp.log(lsafe)                                     # (B,KVH,G,qc)
+        return jnp.moveaxis(out, 3, 1).reshape(B, q_chunk, H, hd), L
+
+    out, L = lax.map(one_q_chunk, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * q_chunk, H, hd)
+    L = jnp.moveaxis(L, 0, -2).reshape(B, KVH, G, nq * q_chunk)
+    return out, L
+
+
+def _fa_bwd_impl(q, k, v, out, L, do, kind, window, prefix_len, q_offset,
+                 softcap, q_chunk, k_chunk):
+    """Blockwise flash backward (recompute attention; O(S*chunk) memory)."""
+    del softcap  # bwd path only used with softcap == 0 (asserted by caller)
+    B, Sqp, H, hd = q.shape
+    Skp, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = Sqp // q_chunk, Skp // k_chunk
+    qg = q.reshape(B, nq, q_chunk, KVH, G, hd)
+    kg = k.reshape(B, nk, k_chunk, KVH, hd)
+    vg = v.reshape(B, nk, k_chunk, KVH, hd)
+    dog = do.reshape(B, nq, q_chunk, KVH, G, hd)
+    Lg = L.reshape(B, KVH, G, nq, q_chunk)
+    # D_i = rowsum(do * out)
+    Df = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    Dg = Df.reshape(B, nq, q_chunk, KVH, G)
+
+    def per_q_chunk(carry, qi):
+        dk_acc, dv_acc = carry                       # (B, Skp, KVH, hd) f32
+        qq = qg[:, qi].astype(jnp.float32)           # (B,qc,KVH,G,hd)
+        doo = dog[:, qi].astype(jnp.float32)
+        Li = Lg[:, :, :, qi]                         # (B,KVH,G,qc)
+        Di = Dg[:, qi].transpose(0, 2, 3, 1)         # (B,KVH,G,qc)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def per_k_chunk(inner, ki):
+            dq_c, dk_acc, dv_acc = inner
+            kk = lax.dynamic_index_in_dim(kg, ki, 1, keepdims=False).astype(jnp.float32)
+            vv = lax.dynamic_index_in_dim(vg, ki, 1, keepdims=False).astype(jnp.float32)
+            s = jnp.einsum("bqngh,bknh->bngqk", qq * scale, kk)
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            mask = _chunk_mask(kind, q_pos, k_pos, window=window,
+                               prefix_len=prefix_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - Li[..., None])                       # (B,n,g,qc,kc)
+            dp = jnp.einsum("bqngh,bknh->bngqk", doo, vv)
+            ds = p * (dp - Di[..., None])
+            dq_c = dq_c + jnp.einsum("bngqk,bknh->bqngh", ds, kk) * scale
+            dk_blk = jnp.einsum("bngqk,bqngh->bknh", ds, qq) * scale
+            dv_blk = jnp.einsum("bngqk,bqngh->bknh", p, doo)
+            dk_acc = lax.dynamic_update_slice_in_dim(
+                dk_acc, lax.dynamic_slice_in_dim(dk_acc, ki * k_chunk, k_chunk, 1)
+                + dk_blk, ki * k_chunk, 1)
+            dv_acc = lax.dynamic_update_slice_in_dim(
+                dv_acc, lax.dynamic_slice_in_dim(dv_acc, ki * k_chunk, k_chunk, 1)
+                + dv_blk, ki * k_chunk, 1)
+            return (dq_c, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, q_chunk, KVH, G, hd), jnp.float32)
+        (dq_c, dk_acc, dv_acc), _ = lax.scan(
+            per_k_chunk, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_c
+
+    # keep the accumulators in the flash layout (S local, heads sharded):
+    # without this they inherit the sequence-sharded residual layout and
+    # every inner dynamic-update-slice re-gathers them (§Perf iteration 2)
+    dk0 = maybe_shard(jnp.zeros((B, Skp, KVH, hd), jnp.float32), "attn_kv")
+    dv0 = maybe_shard(jnp.zeros((B, Skp, KVH, hd), jnp.float32), "attn_kv")
+    (dk, dv), dqs = lax.scan(per_q_chunk, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sqp, H, hd)
+    dq = maybe_shard(dq, "attn_heads")
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    prefix_len=0, q_offset=0, softcap: float = 0.0,
+                    q_chunk: int = 512, k_chunk: int = 1024):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KVH, hd) -> (B, Sq, H, hd).
+
+    GQA via head grouping; double-chunked online softmax; memory is
+    O(Sq * k_chunk), never (Sq, Sk). Differentiable via a custom VJP that
+    recomputes attention blockwise (flash backward) — AD through the
+    forward scan would otherwise save per-step score blocks (full S^2).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    q_chunk = min(q_chunk, max(Sq, 1))
+    k_chunk = min(k_chunk, max(Sk, 1))
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    pq, pk = nq * q_chunk - Sq, nk * k_chunk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:  # padded keys are masked via prefix/causal/window position checks
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # mask out padded keys for non-causal kinds by position validity:
+    # _chunk_mask handles causal/window; for bidir/prefix we clamp via kind
+    # -> use a window-free trick: treat pad keys as future (pos >= Sk).
+    pad_kind = kind
+    if kind == "bidir" and pk:
+        # bidirectional with key padding: emulate with a prefix mask over the
+        # real keys and push q positions negative so the causal branch of the
+        # prefix mask never fires -> every query sees exactly keys [0, Sk).
+        pad_kind, prefix_len = "prefix", Sk
+        q_offset = -(nq * q_chunk + 1)
+
+    statics = (pad_kind, window, prefix_len, q_offset, softcap, q_chunk, k_chunk)
+
+    if softcap > 0.0:
+        out, _ = _fa_fwd_impl(q, k, v, *statics)   # no custom bwd w/ softcap
+        return out[:, :Sq]
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return _fa_fwd_impl(q, k, v, *statics)[0]
+
+    def fa_fwd(q, k, v):
+        out, L = _fa_fwd_impl(q, k, v, *statics)
+        return out, (q, k, v, out, L)
+
+    def fa_bwd(res, do):
+        return _fa_bwd_impl(*res, do, *statics)
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa(q, k, v)[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, *, k_pos, cur_pos, softcap: float = 0.0):
+    """Single-step attention over a KV cache.
+
+    q: (B, 1, H, hd); k_cache, v_cache: (B, C, KVH, hd);
+    k_pos: (B, C) absolute position of each cache slot (-1 = empty);
+    cur_pos: scalar or (B,) current absolute position.
+    """
+    B, _, H, hd = q.shape
+    C, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qq = (q[:, 0] * scale).reshape(B, KVH, G, hd)
+    s = jnp.einsum("bngh,bknh->bngk", qq, k_cache)           # (B, KVH, G, C)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    del cur_pos  # slots are only ever written up to the current position
+    valid = k_pos >= 0                                       # (B, C)
+    s = jnp.where(valid[:, None, None, :], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bngk,bknh->bngh", p, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# --------------------------------------------------------------------------
+# attention layer (init/apply over full-seq and decode paths)
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def attn_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense_apply(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense_apply(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply_fullseq(p, x, cfg, *, kind="causal", window=0, prefix_len=0,
+                       positions=None, cross_kv=None):
+    """Full-sequence attention (training / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    if cross_kv is None:
+        q, k, v = attn_qkv(p, x, cfg, positions if cfg.rope_theta > 0 else None)
+    else:
+        hd = cfg.hd
+        q = dense_apply(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+        if cfg.rope_theta > 0:
+            q = rope(q, positions, cfg.rope_theta)
+        k, v = cross_kv
+        kind = "bidir"
+    # pin the flash layout: heads -> `model`, S local per shard. Without
+    # this, S stays sequence-sharded (residual policy) and every k-block
+    # slice in the flash scans re-gathers the full K/V (EXPERIMENTS.md
+    # §Perf iteration 1: 6.6 TB -> 0.1 TB of all-gather per step on
+    # qwen1.5-0.5b train_4k).
+    q = maybe_shard(q, "attn_heads")
+    k = maybe_shard(k, "attn_kv")
+    v = maybe_shard(v, "attn_kv")
+    out = flash_attention(q, k, v, kind=kind, window=window,
+                          prefix_len=prefix_len, softcap=cfg.logit_softcap)
+    out = dense_apply(p["wo"], out.reshape(B, S, -1))
+    return out, (k, v)
+
+
+def attn_apply_decode(p, x, cfg, cache, *, cur_pos, window=0):
+    """One-token decode. cache: {k, v, pos}; ring-buffered when window>0.
+
+    x: (B, 1, D). Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    q = dense_apply(p["wq"], x).reshape(B, 1, cfg.n_heads, hd)
+    k = dense_apply(p["wk"], x).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], x).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        pos = jnp.full((B, 1), cur_pos)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    C = cache["k"].shape[1]
+    slot = jnp.asarray(cur_pos % C) if window else jnp.asarray(cur_pos)
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    k_pos = lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((B, 1), cur_pos, cache["pos"].dtype), slot, 1)
+    out = decode_attention(q, k_cache, v_cache, k_pos=k_pos, cur_pos=cur_pos,
+                           softcap=cfg.logit_softcap)
+    out = dense_apply(p["wo"], out.reshape(B, 1, -1))
+    return out, {"k": k_cache, "v": v_cache, "pos": k_pos}
+
+
+def attn_cache_init(cfg, batch: int, seq_len: int, *, window: int = 0,
+                    dtype=jnp.bfloat16):
+    C = min(window, seq_len) if window else seq_len
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, C), -1, jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wi": dense_init(ks[0], cfg.d_model, d_ff),
+                "wg": dense_init(ks[1], cfg.d_model, d_ff),
+                "wo": dense_init(ks[2], d_ff, cfg.d_model)}
+    return {"w1": dense_init(ks[0], cfg.d_model, d_ff, bias=True),
+            "w2": dense_init(ks[1], d_ff, cfg.d_model, bias=True)}
+
+
+def mlp_apply(p, x, cfg):
+    if "wi" in p:   # swiglu
+        h = jax.nn.silu(dense_apply(p["wg"], x)) * dense_apply(p["wi"], x)
+        return dense_apply(p["wo"], h)
+    h = jax.nn.gelu(dense_apply(p["w1"], x))
+    return dense_apply(p["w2"], h)

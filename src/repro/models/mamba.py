@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) block, chunked-scan training + O(1)-state decode.
+
+Per head h (state: d_state x head_dim):
+
+    a_t = exp(-softplus(dt_t + dt_bias) * exp(A_log))      scalar decay
+    h_t = a_t h_{t-1} + dt_t * B_t^T x_t
+    y_t = C_t h_t + D * x_t
+
+Because the decay is *scalar per head per step* (unlike RWKV6's
+per-channel decay), the chunked form is pure matmuls:
+
+    scores_ts = (C_t . B_s) * exp(ca_t - ca_s) * dt_s      (s <= t)
+    y_intra   = scores @ x
+    y_inter_t = exp(ca_t) * (C_t h_0)
+    h_L       = exp(ca_L) h_0 + sum_s exp(ca_L - ca_s) dt_s B_s^T x_s
+
+with ca the inclusive cumulative log decay (everything <= 0: no overflow).
+Includes the Mamba2 depthwise causal conv (width cfg.ssm_conv) on (x,B,C)
+and the gated RMSNorm before out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocks import dense_init, dense_apply, norm_init, norm_apply
+from ..sharding.policy import maybe_shard
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_init(key, cfg):
+    D = cfg.d_model
+    d_inner, H, hd, ds = _dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": norm_init(cfg.norm, D),
+        # in_proj -> [z (d_inner), x (d_inner), B (ds), C (ds), dt (H)]
+        "in_proj": dense_init(ks[0], D, 2 * d_inner + 2 * ds + H),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),           # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gn": norm_init("rms", d_inner),
+        "out_proj": dense_init(ks[2], d_inner, D),
+    }
+
+
+def _causal_conv(w, b, x, state=None):
+    """Depthwise causal conv. x: (B, S, C); state: (B, K-1, C) carry-in.
+
+    Returns (y, new_state) with new_state = last K-1 inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    return y, xp[:, -(K - 1):]
+
+
+def _project(p, xin, cfg):
+    """xin: (B, S, D) -> z, x, Bm, Cm, dt (+conv applied), plus raw conv input."""
+    d_inner, H, hd, ds = _dims(cfg)
+    proj = dense_apply(p["in_proj"], xin)
+    z, xr, Bm, Cm, dt = jnp.split(proj, [d_inner, 2 * d_inner, 2 * d_inner + ds,
+                                         2 * d_inner + 2 * ds], axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    return z, conv_in, dt
+
+
+def _ssd_inputs(p, conv_out, dt, cfg):
+    d_inner, H, hd, ds = _dims(cfg)
+    B_, S = conv_out.shape[0], conv_out.shape[1]
+    xr, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+    xh = maybe_shard(xr.reshape(B_, S, H, hd), "ssm_heads")
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B, S, H)
+    loga = -dtv * jnp.exp(p["A_log"])                                  # (B, S, H) <= 0
+    return xh, Bm, Cm, dtv, loga
+
+
+def mamba_block_full(p, x, cfg, chunk: int = 64, st=None):
+    """x: (B, S, D) -> (out, state dict)."""
+    B_, S, D = x.shape
+    d_inner, H, hd, ds = _dims(cfg)
+    xin = norm_apply(p["ln"], x)
+    z, conv_in, dt = _project(p, xin, cfg)
+    conv_out, conv_state = _causal_conv(p["conv_w"], p["conv_b"], conv_in,
+                                        None if st is None else st["conv"])
+    xh, Bm, Cm, dtv, loga = _ssd_inputs(p, conv_out, dt, cfg)
+
+    L = min(chunk, S)
+    n = -(-S // L)
+    pad = n * L - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))   # log a = 0 keeps state
+
+    @jax.checkpoint
+    def chunk_step(h0, inp):
+        xx, BB, CC, dd, la = inp                          # (B, L, ...), f32 below
+        xx32, BB32, CC32 = xx.astype(jnp.float32), BB.astype(jnp.float32), CC.astype(jnp.float32)
+        ca = jnp.cumsum(la, axis=1)                       # (B, L, H)
+        # intra-chunk
+        cbts = jnp.einsum("btn,bsn->bts", CC32, BB32)     # (B, t, s)
+        decay = jnp.exp(ca[:, :, None] - ca[:, None, :])  # (B, t, s, H)
+        tri = jnp.tril(jnp.ones((decay.shape[1],) * 2, bool))
+        scores = cbts[..., None] * decay * dd[:, None, :, :]          # (B, t, s, H)
+        scores = jnp.where(tri[None, :, :, None], scores, 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", scores, xx32)
+        # inter
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", CC32, jnp.exp(ca), h0)
+        # state update
+        caL = ca[:, -1:]                                  # (B, 1, H)
+        w = jnp.exp(caL - ca) * dd                        # (B, L, H)
+        h1 = jnp.exp(caL[:, 0])[:, :, None, None] * h0 + jnp.einsum(
+            "bsn,bsh,bshp->bhnp", BB32, w, xx32)
+        return h1, y.astype(x.dtype)
+
+    h0 = (jnp.zeros((B_, H, ds, hd), jnp.float32) if st is None else st["ssm"])
+    xs = tuple(t.reshape(B_, n, L, *t.shape[2:]).swapaxes(0, 1)
+               for t in (xh, Bm, Cm, dtv, loga))
+    h_final, ys = lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B_, n * L, H, hd)[:, :S]
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh[:, :S].astype(x.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = norm_apply(p["gn"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y)
+    return x + out, {"ssm": h_final, "conv": conv_state}
+
+
+def mamba_ref(p, x, cfg):
+    """Per-step scan oracle."""
+    B_, S, D = x.shape
+    d_inner, H, hd, ds = _dims(cfg)
+    xin = norm_apply(p["ln"], x)
+    z, conv_in, dt = _project(p, xin, cfg)
+    conv_out, _ = _causal_conv(p["conv_w"], p["conv_b"], conv_in)
+    xh, Bm, Cm, dtv, loga = _ssd_inputs(p, conv_out, dt, cfg)
+
+    def step(h, inp):
+        xx, BB, CC, dd, la = inp
+        xx, BB, CC = xx.astype(jnp.float32), BB.astype(jnp.float32), CC.astype(jnp.float32)
+        h = jnp.exp(la)[:, :, None, None] * h + jnp.einsum(
+            "bn,bh,bhp->bhnp", BB, dd, xx)
+        y = jnp.einsum("bn,bhnp->bhp", CC, h)
+        return h, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (xh, Bm, Cm, dtv, loga))
+    h0 = jnp.zeros((B_, H, ds, hd), jnp.float32)
+    _, ys = lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh.astype(x.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = norm_apply(p["gn"], y * jax.nn.silu(z))
+    return x + dense_apply(p["out_proj"], y)
+
+
+def mamba_state_init(cfg, batch: int, dtype=jnp.float32):
+    d_inner, H, hd, ds = _dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    return {"ssm": jnp.zeros((batch, H, ds, hd), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)}
+
+
+def mamba_block_decode(p, x, cfg, st):
+    """x: (B, 1, D). O(1) recurrent step."""
+    B_, _, D = x.shape
+    d_inner, H, hd, ds = _dims(cfg)
+    xin = norm_apply(p["ln"], x)
+    z, conv_in, dt = _project(p, xin, cfg)
+    conv_out, conv_state = _causal_conv(p["conv_w"], p["conv_b"], conv_in, st["conv"])
+    xh, Bm, Cm, dtv, loga = _ssd_inputs(p, conv_out, dt, cfg)
+    xx, BB, CC = (t[:, 0].astype(jnp.float32) for t in (xh, Bm, Cm))
+    dd, la = dtv[:, 0], loga[:, 0]
+    h = jnp.exp(la)[:, :, None, None] * st["ssm"] + jnp.einsum("bn,bh,bhp->bhnp", BB, dd, xx)
+    y = jnp.einsum("bn,bhnp->bhp", CC, h)[:, None].astype(x.dtype)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh.astype(x.dtype)
+    y = y.reshape(B_, 1, d_inner)
+    y = norm_apply(p["gn"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y)
+    return x + out.astype(x.dtype), {"ssm": h, "conv": conv_state}

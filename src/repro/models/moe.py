@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: top-k router + static-shape sort-gather dispatch.
+
+TPU adaptation notes (DESIGN.md §2): GPU MoE implementations use ragged
+grouped-GEMM (megablocks). On TPU under pjit we keep every shape static:
+
+  1. router: logits (T, E) -> top-k (weights, expert ids)
+  2. dispatch: sort the T*k (token, expert) assignments by expert id, then
+     scatter into a fixed (E, C) slot buffer, C = capacity per expert
+     (tokens beyond capacity are dropped — standard Switch-style capacity).
+  3. expert compute: one batched einsum over the (E, C, D) buffer against
+     expert weights (E, D, F) — MXU-friendly, and with experts sharded over
+     the `model` mesh axis this is expert parallelism: GSPMD materializes
+     the token all-to-all that the roofline analysis measures.
+  4. combine: gather back to token order, weight, and sum over k.
+
+Aux losses: load-balance (Switch) + router z-loss, returned for logging.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocks import dense_init, dense_apply, mlp_init, mlp_apply
+from ..sharding.policy import maybe_shard
+
+
+def moe_init(key, cfg):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    def ew(k, a, b):
+        return jax.random.normal(k, (E, a, b), jnp.float32) / jnp.sqrt(a)
+    p = {
+        "router": dense_init(ks[0], D, E),
+        "wi": ew(ks[1], D, F),
+        "wg": ew(ks[2], D, F),
+        "wo": ew(ks[3], F, D),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=cfg.shared_d_ff)
+    return p
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    # round up to 128 so the capacity axis stays shardable / MXU-aligned
+    return max(128, -(-c // 128) * 128)
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (out (B, S, D), aux dict)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = dense_apply(p["router"], xt.astype(jnp.float32))        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, k)                               # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # ---- dispatch: sort assignments by expert, slot within capacity ----
+    flat_e = top_e.reshape(-1)                                       # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each assignment within its expert group
+    counts = jnp.bincount(se, length=E)                              # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * k) - starts[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)                 # E*C = drop bin
+
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xt[st])
+    buf = maybe_shard(buf[:-1].reshape(E, C, D), "moe_buffer")
+
+    # ---- expert compute (experts sharded over `model` => all-to-all) ----
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    h = maybe_shard(jax.nn.silu(g) * h, "moe_buffer")
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))   # (E, C, D)
+    out_e = maybe_shard(out_e, "moe_buffer")
+
+    # ---- combine: gather back to assignment order, weighted scatter-add --
+    out_flat = out_e.reshape(E * C, D)
+    per_assign = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, E * C - 1)], 0.0)
+    per_assign = maybe_shard(per_assign, "moe_tokens")   # (T*k, D) token-sharded
+    y = jnp.zeros((T, D), x.dtype).at[st].add(per_assign * sw[:, None].astype(x.dtype))
+    y = maybe_shard(y, "moe_tokens")
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xt, cfg)
+
+    # ---- aux losses ----
+    frac_tokens = jnp.bincount(top_e.reshape(-1), length=E) / (T * k)
+    frac_probs = probs.mean(0)
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - keep.mean()
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return y.reshape(B, S, D), aux
+
+
+def moe_ref(p, x, cfg):
+    """Dense (no-capacity, no-drop) oracle for tests: loops experts."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = dense_apply(p["router"], xt.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(xt)
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(xt @ p["wg"][e]) * (xt @ p["wi"][e])
+        oe = h @ p["wo"][e]
+        w = jnp.sum(jnp.where(top_e == e, top_p, 0.0), axis=-1)
+        y = y + oe * w[:, None]
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xt, cfg)
+    return y.reshape(B, S, D)

@@ -1,0 +1,233 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+The recurrence per head (k-dim x v-dim state S):
+
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t   = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0, 1) *per channel per step* —
+the data-dependent decay that distinguishes RWKV6 [arXiv:2404.05892].
+
+Training/prefill uses a chunked formulation (lax.scan over chunks of
+length L): all decay ratios are formed in log space as pairwise
+differences of the inclusive cumulative log-decay `a`, so nothing
+overflows:
+
+    intra: y_t += sum_{s<t} (r_t . (k_s * exp(b_t - a_s))) v_s
+                 + (r_t . (k_t * u)) v_t            with b_t = a_{t-1}
+    inter: y_t += (r_t * exp(b_t)) S_0
+    state: S_L  = diag(exp(a_L)) S_0 + sum_s (k_s * exp(a_L - a_s))^T v_s
+
+Decode is the plain O(1)-state recurrence (this is why rwkv6 runs the
+long_500k shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocks import dense_init, dense_apply, norm_init, norm_apply
+from ..sharding.policy import maybe_shard
+
+LORA_RANK = 32
+
+
+def _lora_init(key, d, rank, out=None):
+    k1, k2 = jax.random.split(key)
+    out = out or d
+    return {"a": jax.random.normal(k1, (d, rank), jnp.float32) * 0.01,
+            "b": jax.random.normal(k2, (rank, out), jnp.float32) * 0.01}
+
+
+def _lora(p, x):
+    return jnp.tanh(x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype)
+
+
+def rwkv_init(key, cfg):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    ks = jax.random.split(key, 16)
+    tm = {
+        "mu_x": jnp.zeros((D,), jnp.float32) + 0.5,
+        # per-target DDLerp mixes (r, k, v, g, w)
+        **{f"mu_{t}": jnp.full((D,), 0.5, jnp.float32) for t in "rkvgw"},
+        **{f"lora_{t}": _lora_init(ks[i], D, LORA_RANK) for i, t in enumerate("rkvgw")},
+        "wr": dense_init(ks[6], D, D),
+        "wk": dense_init(ks[7], D, D),
+        "wv": dense_init(ks[8], D, D),
+        "wg": dense_init(ks[9], D, D),
+        "wo": dense_init(ks[10], D, D),
+        "w0": jnp.full((D,), -2.0, jnp.float32),         # base log-log decay
+        "lora_w": _lora_init(ks[11], D, 64),
+        "u": jax.random.normal(ks[12], (H, hd), jnp.float32) * 0.1,
+        "ln_x": norm_init("layer", D),                   # group-norm surrogate
+    }
+    cm = {
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "wk": dense_init(ks[13], D, cfg.d_ff),
+        "wv": dense_init(ks[14], cfg.d_ff, D),
+        "wr": dense_init(ks[15], D, D),
+    }
+    return {"ln1": norm_init(cfg.norm, D), "time_mix": tm,
+            "ln2": norm_init(cfg.norm, D), "channel_mix": cm}
+
+
+def _ddlerp(tm, x, x_prev):
+    """Data-dependent token-shift interpolation -> dict of mixed inputs."""
+    xx = x_prev - x
+    base = x + xx * tm["mu_x"].astype(x.dtype)
+    out = {}
+    for t in "rkvgw":
+        mix = tm[f"mu_{t}"].astype(x.dtype) + _lora(tm[f"lora_{t}"], base)
+        out[t] = x + xx * mix
+    return out
+
+
+def _rkvgw(tm, x, x_prev, H, hd):
+    """Project mixed inputs to r,k,v,g and per-channel decay w (B,S,H,hd)."""
+    B, S, D = x.shape
+    m = _ddlerp(tm, x, x_prev)
+    r = dense_apply(tm["wr"], m["r"]).reshape(B, S, H, hd)
+    k = dense_apply(tm["wk"], m["k"]).reshape(B, S, H, hd)
+    v = dense_apply(tm["wv"], m["v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(dense_apply(tm["wg"], m["g"]))
+    logw = -jnp.exp(tm["w0"].astype(jnp.float32) + _lora(tm["lora_w"], m["w"]).astype(jnp.float32))
+    logw = logw.reshape(B, S, H, hd)                     # log decay, < 0
+    # pin the chunk-scan layout (heads -> model, S local): the (n, L) chunk
+    # reshape of a sequence-sharded tensor would otherwise re-gather the
+    # full stream at every use (EXPERIMENTS.md §Perf iteration 8)
+    r, k, v = (maybe_shard(t, "ssm_heads") for t in (r, k, v))
+    logw = maybe_shard(logw, "ssm_heads")
+    return r, k, v, g, logw
+
+
+def time_mix_chunked(tm, x, cfg, state=None, x_last=None, chunk: int = 32):
+    """x: (B, S, D). Returns (out, (state (B,H,hd,hd), x_last (B,D)))."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rkvgw(tm, x, x_prev, H, hd)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    L = min(chunk, S)
+    n = -(-S // L)
+    pad = n * L - S
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, z4) for t in (r, k, v))
+        logw = jnp.pad(logw, z4)                         # log w = 0 -> w = 1 (keeps state)
+    rc, kc, vc, wc = (t.reshape(B, n, L, H, hd) for t in (r, k, v, logw))
+    u = tm["u"].astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk_step(S0, inp):
+        rr, kk, vv, ww = inp                             # (B, L, H, hd)
+        rr32, kk32, vv32 = rr.astype(jnp.float32), kk.astype(jnp.float32), vv.astype(jnp.float32)
+        a = jnp.cumsum(ww, axis=1)                       # inclusive cum log decay
+        b = a - ww                                       # exclusive
+        # inter-chunk: y_t = (r_t * exp(b_t)) @ S0
+        y_inter = jnp.einsum("blhk,bhkv->blhv", rr32 * jnp.exp(b), S0)
+        # intra-chunk strict-lower scores (B, H, L, L)
+        decay = jnp.exp(b[:, :, None] - a[:, None, :])   # (B, t, s, H, hd)
+        scores = jnp.einsum("bthk,bshk,btshk->bhts", rr32, kk32, decay)
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        diag = jnp.einsum("blhk,blhk,hk->blh", rr32, kk32, u)
+        y_intra = jnp.einsum("bhts,bshv->bthv", scores, vv32) + diag[..., None] * vv32
+        # state update
+        aL = a[:, -1][:, None]                           # (B, 1, H, hd)
+        S1 = jnp.exp(aL[:, 0])[..., None] * S0 + jnp.einsum(
+            "bshk,bshv->bhkv", kk32 * jnp.exp(aL - a), vv32)
+        return S1, (y_inter + y_intra).astype(x.dtype)
+
+    xs = tuple(t.swapaxes(0, 1) for t in (rc, kc, vc, wc))
+    state, ys = lax.scan(chunk_step, state, xs)
+    y = ys.swapaxes(0, 1).reshape(B, n * L, H, hd)[:, :S]
+    y = norm_apply(tm["ln_x"], y.reshape(B, S, D)) * g
+    return dense_apply(tm["wo"], y), (state, x[:, -1])
+
+
+def time_mix_ref(tm, x, cfg):
+    """Per-step scan oracle for tests."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rkvgw(tm, x, x_prev, H, hd)
+    u = tm["u"].astype(jnp.float32)
+
+    def step(S0, inp):
+        rr, kk, vv, ww = (t.astype(jnp.float32) for t in inp)    # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kk, vv)
+        y = jnp.einsum("bhk,bhkv->bhv", rr, S0 + u[None, :, :, None] * kv)
+        S1 = jnp.exp(ww)[..., None] * S0 + kv
+        return S1, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, logw))   # (S, B, H, hd)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = lax.scan(step, S0, xs)
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    y = norm_apply(tm["ln_x"], y.reshape(B, S, D)) * g
+    return dense_apply(tm["wo"], y)
+
+
+def time_mix_decode(tm, x, cfg, state, x_last):
+    """x: (B, 1, D); state: (B, H, hd, hd). O(1) recurrent step."""
+    B, _, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    r, k, v, g, logw = _rkvgw(tm, x, x_last[:, None], H, hd)
+    rr, kk, vv = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    ww = logw[:, 0]
+    u = tm["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kk, vv)
+    y = jnp.einsum("bhk,bhkv->bhv", rr, state + u[None, :, :, None] * kv)
+    state = jnp.exp(ww)[..., None] * state + kv
+    y = norm_apply(tm["ln_x"], y.reshape(B, 1, D).astype(x.dtype)) * g
+    return dense_apply(tm["wo"], y), (state, x[:, -1])
+
+
+def channel_mix(cm, x, x_last=None):
+    """RWKV channel-mix (squared-relu MLP with token shift)."""
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * cm["mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * cm["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense_apply(cm["wk"], xk)))
+    return jax.nn.sigmoid(dense_apply(cm["wr"], xr)) * dense_apply(cm["wv"], kk), x[:, -1]
+
+
+def rwkv_block_full(p, x, cfg, chunk: int = 32):
+    y, (state, xl1) = time_mix_chunked(p["time_mix"], norm_apply(p["ln1"], x), cfg, chunk=chunk)
+    x = x + y
+    y, xl2 = channel_mix(p["channel_mix"], norm_apply(p["ln2"], x))
+    x = x + y
+    return x, {"state": state, "x_last_tm": xl1, "x_last_cm": xl2}
+
+
+def rwkv_state_init(cfg, batch: int, dtype=jnp.float32):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    return {"state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_last_tm": jnp.zeros((batch, D), dtype),
+            "x_last_cm": jnp.zeros((batch, D), dtype)}
+
+
+def rwkv_block_decode(p, x, cfg, st):
+    dt = x.dtype
+    y, (state, xl1) = time_mix_decode(p["time_mix"], norm_apply(p["ln1"], x), cfg,
+                                      st["state"], st["x_last_tm"].astype(dt))
+    x = (x + y).astype(dt)
+    xp = st["x_last_cm"].astype(dt)
+    y, xl2 = channel_mix(p["channel_mix"], norm_apply(p["ln2"], x), x_last=xp)
+    x = (x + y).astype(dt)
+    return x, {"state": state,
+               "x_last_tm": xl1.astype(st["x_last_tm"].dtype),
+               "x_last_cm": xl2.astype(st["x_last_cm"].dtype)}

@@ -1,0 +1,56 @@
+"""1-D conv UNet — the paper's PDEBench Advection workload, reduced to 1-D.
+
+Down path: stride-2 convs doubling channels; up path: nearest-neighbour
+upsample + conv with skip concatenation. Regression head to 1 channel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _conv_init(key, k, cin, cout):
+    w = jax.random.normal(key, (k, cin, cout), jnp.float32) / jnp.sqrt(k * cin)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    y = lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def unet_init(key, cfg):
+    c0 = cfg.d_model
+    depth = cfg.n_units
+    ks = iter(jax.random.split(key, 4 * depth + 4))
+    enc, dec = [], []
+    cin = 1
+    chans = [c0 * (2 ** i) for i in range(depth)]
+    for c in chans:
+        enc.append({"c1": _conv_init(next(ks), 3, cin, c), "c2": _conv_init(next(ks), 3, c, c)})
+        cin = c
+    for c in reversed(chans):
+        dec.append({"c1": _conv_init(next(ks), 3, cin + c, c), "c2": _conv_init(next(ks), 3, c, c)})
+        cin = c
+    return {"enc": tuple(enc), "dec": tuple(dec),
+            "head": _conv_init(next(ks), 1, cin, 1)}
+
+
+def unet_apply(params, u, cfg):
+    """u: (B, L, 1) -> (B, L, 1)."""
+    x = u
+    skips = []
+    for st in params["enc"]:
+        x = jax.nn.gelu(_conv(st["c1"], x))
+        x = jax.nn.gelu(_conv(st["c2"], x))
+        skips.append(x)
+        x = x[:, ::2]                              # downsample
+    for st, sk in zip(params["dec"], reversed(skips)):
+        x = jnp.repeat(x, 2, axis=1)[:, :sk.shape[1]]  # upsample
+        x = jnp.concatenate([x, sk], axis=-1)
+        x = jax.nn.gelu(_conv(st["c1"], x))
+        x = jax.nn.gelu(_conv(st["c2"], x))
+    return _conv(params["head"], x)

@@ -1,0 +1,52 @@
+"""Small Vision Transformer — the paper's Fig. 4 / Table 1 workload.
+
+Patch-embeds 28x28 images (patch 14 -> 4 patches), prepends a CLS token,
+runs `enc_attn_mlp` layers (bidirectional attention), classifies from CLS.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import dense_apply, dense_init, norm_apply, norm_init
+from .transformer import layer_apply_full, layer_init
+
+
+PATCH = 14
+IMG = 28
+
+
+def vit_init(key, cfg):
+    n_patch = (IMG // PATCH) ** 2
+    ks = jax.random.split(key, 4 + 1)
+    units = jax.vmap(lambda kk: layer_init("enc_attn_mlp", kk, cfg))(
+        jax.random.split(ks[0], cfg.n_units))
+    return {
+        "patch": dense_init(ks[1], PATCH * PATCH, cfg.d_model),
+        "cls": jax.random.normal(ks[2], (1, 1, cfg.d_model), jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[3], (1, n_patch + 1, cfg.d_model), jnp.float32) * 0.02,
+        "units": units,
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+        "head": dense_init(ks[4], cfg.d_model, cfg.vocab_size),
+    }
+
+
+def vit_apply(params, images, cfg):
+    """images: (B, 28, 28, 1) -> logits (B, n_classes)."""
+    B = images.shape[0]
+    g = IMG // PATCH
+    x = images.reshape(B, g, PATCH, g, PATCH)
+    x = x.transpose(0, 1, 3, 2, 4).reshape(B, g * g, PATCH * PATCH)
+    x = dense_apply(params["patch"], x)
+    x = jnp.concatenate([jnp.broadcast_to(params["cls"].astype(x.dtype),
+                                          (B, 1, cfg.d_model)), x], axis=1)
+    x = x + params["pos"].astype(x.dtype)
+    ctx = {"cache_dtype": jnp.bfloat16}
+
+    def body(x, unit_params):
+        x, _, _ = layer_apply_full("enc_attn_mlp", unit_params, x, cfg, ctx)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["units"])
+    x = norm_apply(params["final_norm"], x)
+    return dense_apply(params["head"], x[:, 0])

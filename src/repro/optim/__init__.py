@@ -1,0 +1,2 @@
+from .optimizers import sgd, adam, adafactor, make as make_optimizer
+from .schedules import constant, cosine, warmup_cosine

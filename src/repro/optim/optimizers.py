@@ -1,0 +1,129 @@
+"""Hand-rolled optimizers (no optax dependency).
+
+Interface: opt.init(params) -> state ; opt.update(params, grads, state)
+-> (new_params, new_state). All states are pytrees -> vmappable over the
+particle axis and shardable under pjit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str = "opt"
+
+
+def _sched(lr):
+    return lr if callable(lr) else (lambda step: lr)
+
+
+def sgd(lr=1e-2, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = mu
+        else:
+            mu = None
+            upd = grads
+        new = jax.tree.map(lambda p, u: p - lr_t * u.astype(p.dtype), params, upd)
+        return new, {"step": step, "mu": mu}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adam(lr=1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return p - lr_t * u.astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adam")
+
+
+def adafactor(lr=1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moment (Shazeer & Stern): O(rows+cols) state for
+    matrices — what makes 405B-class optimizer state fit HBM (DESIGN.md §4)."""
+    lr_fn = _sched(lr)
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(
+            one, params, is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def one(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps)
+                u = g32 / jnp.sqrt(denom + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g32 / jnp.sqrt(nv["v"] + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return p - lr_t * u.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [one(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "v": new_v}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make(name: str, lr=1e-3, **kw) -> Optimizer:
+    return {"sgd": sgd, "adam": adam, "adafactor": adafactor}[name](lr, **kw)

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (callables of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: lr
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        return lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        return jnp.where(s < warmup, lr * s / max(warmup, 1), cos(step - warmup))
+    return f

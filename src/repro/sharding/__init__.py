@@ -1,0 +1,2 @@
+from . import policy, rules
+from .policy import activation_policy, maybe_shard

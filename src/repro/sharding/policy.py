@@ -1,0 +1,58 @@
+"""Activation-sharding policy: a context-scoped map name -> PartitionSpec.
+
+Model code calls ``maybe_shard(x, "residual")`` at layer boundaries; with
+no active policy (CPU smokes, unit tests) it is a no-op, under the launch
+code's ``activation_policy(...)`` context it becomes a GSPMD sharding
+constraint. This keeps the model zoo mesh-agnostic while letting the
+dry-run pin the Megatron-SP style layout (sequence-sharded residuals,
+head-sharded attention) that the roofline analysis assumes.
+
+Under ``vmap(..., spmd_axis_name=...)`` (the particle axis) JAX prepends
+the particle mesh axis to these specs automatically.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_tls = threading.local()
+
+
+def current_policy() -> Optional[Dict[str, PartitionSpec]]:
+    return getattr(_tls, "policy", None)
+
+
+@contextmanager
+def activation_policy(policy: Dict[str, PartitionSpec]):
+    prev = current_policy()
+    _tls.policy = policy
+    try:
+        yield
+    finally:
+        _tls.policy = prev
+
+
+def maybe_shard(x, name: str):
+    pol = current_policy()
+    if pol is None or name not in pol:
+        return x
+    spec = pol[name]
+    if len(spec) != x.ndim:  # rank mismatch (e.g. smoke path) -> skip
+        return x
+    mesh_shape = pol.get("__mesh__")
+    if mesh_shape:  # drop axes whose dim is not divisible by the mesh axis
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+            size = 1
+            for a in axes:
+                size *= mesh_shape.get(a, 1)
+            fixed.append(ax if size > 1 and dim % size == 0 else None)
+        # NOTE: even an all-None spec is applied — forcing replication
+        # hoists gathers out of surrounding scans (EXPERIMENTS.md §Perf)
+        spec = PartitionSpec(*fixed)
+    return jax.lax.with_sharding_constraint(x, spec)

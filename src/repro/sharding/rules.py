@@ -1,0 +1,101 @@
+"""Parameter-sharding rules: path patterns -> PartitionSpec tails.
+
+A rule maps the *trailing* dims of a parameter (the dims the layer math
+sees); leading stacking dims (lax.scan unit axis, particle axis) are
+padded with None / the particle axis automatically.
+
+Two modes:
+  "tp"      tensor-parallel only (particle-parallel archs: the `data` mesh
+            axis carries particles, so within-particle sharding uses only
+            `model`)
+  "fsdp_tp" fully-sharded + tensor-parallel (P=1 giants: weights sharded
+            over `data` *and* `model` — the paper's "single particle
+            across devices" future-work item)
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (regex on normalized path, tp tail, fsdp_tp tail)
+_RULES = [
+    (r"embed$",                      ("model", None),        ("model", "data")),
+    (r"lm_head/w$",                  (None, "model"),        ("data", "model")),
+    (r"(attn|xattn)/(wq|wk|wv)/w$",  (None, "model"),        ("data", "model")),
+    (r"(attn|xattn)/(wq|wk|wv)/b$",  ("model",),             ("model",)),
+    (r"(attn|xattn)/wo/w$",          ("model", None),        ("model", "data")),
+    (r"mlp/(wi|wg|w1)/w$",           (None, "model"),        ("data", "model")),
+    (r"mlp/w1/b$",                   ("model",),             ("model",)),
+    (r"mlp/(wo|w2)/w$",              ("model", None),        ("model", "data")),
+    (r"moe/router/w$",               (None, None),           (None, None)),
+    (r"moe/(wi|wg)$",                ("model", None, None),  ("model", "data", None)),
+    (r"moe/wo$",                     ("model", None, None),  ("model", None, "data")),
+    (r"moe/shared/(wi|wg)/w$",       (None, "model"),        ("data", "model")),
+    (r"moe/shared/wo/w$",            ("model", None),        ("model", "data")),
+    (r"time_mix/(wr|wk|wv|wg)/w$",   (None, "model"),        ("data", "model")),
+    (r"time_mix/wo/w$",              ("model", None),        ("model", "data")),
+    (r"channel_mix/wk/w$",           (None, "model"),        ("data", "model")),
+    (r"channel_mix/wv/w$",           ("model", None),        ("model", "data")),
+    (r"channel_mix/wr/w$",           (None, None),           ("data", None)),
+    (r"in_proj/w$",                  (None, "model"),        ("data", "model")),
+    (r"out_proj/w$",                 (None, None),           (None, "data")),
+    (r"patch/w$",                    (None, None),           (None, None)),
+    (r"head/w$",                     (None, None),           (None, None)),
+]
+_COMPILED = [(re.compile(pat), tp, ftp) for pat, tp, ftp in _RULES]
+
+
+def normalize_path(path) -> str:
+    """jax key path -> 'units/0/attn/wq/w'."""
+    s = jax.tree_util.keystr(path)
+    s = re.sub(r"\]\[", "/", s)
+    s = s.strip("[]").replace("'", "")
+    return s
+
+
+def spec_tail(path_str: str, mode: str) -> Optional[Tuple]:
+    for rx, tp, ftp in _COMPILED:
+        if rx.search(path_str):
+            return tp if mode == "tp" else ftp
+    return None
+
+
+def param_spec(path, ndim: int, mode: str, particle_axis: Optional[str],
+               shape=None, mesh_shape=None) -> P:
+    """Full PartitionSpec for one parameter leaf. When `shape`/`mesh_shape`
+    are given, any axis whose dim is not divisible by its mesh-axis size is
+    dropped to None (e.g. whisper's vocab 51865 on a 16-way model axis)."""
+    tail = spec_tail(normalize_path(path), mode)
+    if tail is None or len(tail) > ndim:
+        tail = ()
+    lead_n = ndim - len(tail)
+    lead = [None] * lead_n
+    if particle_axis is not None and lead_n >= 1:
+        lead[0] = particle_axis
+    spec = list(lead) + list(tail)
+    if shape is not None and mesh_shape is not None:
+        for i, ax in enumerate(spec):
+            if ax is not None and shape[i] % mesh_shape.get(ax, 1) != 0:
+                spec[i] = None
+    return P(*spec)
+
+
+def tree_param_specs(tree, mode: str, particle_axis: Optional[str] = None,
+                     mesh=None):
+    """Pytree of PartitionSpecs matching `tree` (arrays or ShapeDtypeStructs)."""
+    mesh_shape = dict(mesh.shape) if mesh is not None else None
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [param_spec(path, len(leaf.shape), mode, particle_axis,
+                        shape=leaf.shape if mesh is not None else None,
+                        mesh_shape=mesh_shape)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def tree_shardings(mesh, tree, mode: str, particle_axis: Optional[str] = None):
+    specs = tree_param_specs(tree, mode, particle_axis, mesh=mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

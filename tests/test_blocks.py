@@ -1,0 +1,120 @@
+"""Attention / norm / rope unit tests (values AND grads vs naive oracle)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.blocks import (decode_attention, flash_attention,
+                                 norm_apply, norm_init, rope)
+
+
+def naive_attention(q, k, v, kind="causal", window=0, prefix_len=0):
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    qq = q.reshape(B, Sq, KVH, H // KVH, hd)
+    s = jnp.einsum("bqngh,bknh->bngqk", qq, k) / math.sqrt(hd)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    masks = {
+        "causal": kp <= qp,
+        "sliding": (kp <= qp) & (kp > qp - window),
+        "prefix": (kp <= qp) | (kp < prefix_len),
+        "bidir": jnp.ones((Sq, Sk), bool),
+    }
+    s = jnp.where(masks[kind][None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bknh->bngqh", p, v)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd)
+
+
+CASES = [
+    (2, 37, 4, 2, 8, "causal", 0, 0),
+    (1, 64, 4, 1, 16, "sliding", 7, 0),
+    (2, 50, 2, 2, 8, "prefix", 0, 11),
+    (1, 33, 4, 4, 8, "bidir", 0, 0),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd,kind,w,plen", CASES)
+def test_flash_matches_naive(B, S, H, KVH, hd, kind, w, plen):
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    out = flash_attention(q, k, v, kind=kind, window=w, prefix_len=plen,
+                          q_chunk=16, k_chunk=8)
+    ref = naive_attention(q, k, v, kind, w, plen)
+    assert jnp.abs(out - ref).max() < 1e-4
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd,kind,w,plen", CASES)
+def test_flash_grads_match_naive(B, S, H, KVH, hd, kind, w, plen):
+    ks = jax.random.split(jax.random.PRNGKey(S + 1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+
+    def f(q, k, v):
+        return flash_attention(q, k, v, kind=kind, window=w, prefix_len=plen,
+                               q_chunk=16, k_chunk=8).sum()
+
+    def g(q, k, v):
+        return naive_attention(q, k, v, kind, w, plen).sum()
+
+    gf = jax.grad(f, (0, 1, 2))(q, k, v)
+    gn = jax.grad(g, (0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        assert jnp.abs(a - b).max() < 1e-3
+
+
+def test_cross_attention_padded_keys():
+    """bidir with Sk not a chunk multiple (whisper cross-attn 1500 frames)."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 20, 4, 8))
+    k = jax.random.normal(key, (1, 37, 4, 8))
+    v = jax.random.normal(key, (1, 37, 4, 8))
+    out = flash_attention(q, k, v, kind="bidir", q_chunk=16, k_chunk=16)
+    ref = naive_attention(q, k, v, "bidir")
+    assert jnp.abs(out - ref).max() < 1e-4
+
+
+def test_decode_matches_fullseq_last_token():
+    """decode_attention over a cache == last row of full causal attention."""
+    key = jax.random.PRNGKey(1)
+    B, S, H, KVH, hd = 2, 9, 4, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    full = naive_attention(q, k, v, "causal")
+    kpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    dec = decode_attention(q[:, -1:], k, v, k_pos=kpos, cur_pos=S - 1)
+    assert jnp.abs(dec[:, 0] - full[:, -1]).max() < 1e-4
+
+
+def test_rope_relative_property():
+    """RoPE: <rope(q,m), rope(k,n)> depends only on (m - n)."""
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 16))
+
+    def dot_at(m, n):
+        qm = rope(q, jnp.array([m]), 10_000.0)
+        kn = rope(k, jnp.array([n]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-4
+
+
+def test_norms():
+    p = norm_init("rms", 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8)) * 5
+    y = norm_apply(p, x)
+    ms = jnp.mean(jnp.square(y), axis=-1)
+    assert jnp.abs(ms - 1.0).max() < 1e-3
+    p = norm_init("layer", 8)
+    y = norm_apply(p, x)
+    assert jnp.abs(jnp.mean(y, -1)).max() < 1e-4
+    assert jnp.abs(jnp.std(y, -1) - 1.0).max() < 1e-2

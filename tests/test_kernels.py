@@ -1,0 +1,122 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import attention, ref, svgd_rbf, swag_moments
+
+
+@pytest.mark.parametrize("n,D,bd", [(2, 16, 8), (4, 100, 32), (8, 5000, 2048),
+                                    (64, 12345, 4096), (3, 7, 8)])
+def test_pairwise_sqdist(n, D, bd):
+    t = jax.random.normal(jax.random.PRNGKey(0), (n, D), jnp.float32) * 0.1
+    d2 = svgd_rbf.pairwise_sqdist(t, block_d=bd)
+    d2r = ref.pairwise_sqdist(t)
+    assert jnp.abs(d2 - d2r).max() < 1e-3
+    # symmetry + psd-ish basics
+    assert jnp.abs(d2 - d2.T).max() < 1e-5
+    assert float(d2.min()) >= 0.0
+
+
+@pytest.mark.parametrize("n,D,bd,ell", [(4, 100, 32, 1.0), (8, 5000, 2048, 1.3),
+                                        (16, 50000, 8192, 0.7), (3, 7, 8, 2.0)])
+def test_svgd_force(n, D, bd, ell):
+    t = jax.random.normal(jax.random.PRNGKey(0), (n, D), jnp.float32) * 0.05
+    g = jax.random.normal(jax.random.PRNGKey(1), (n, D), jnp.float32)
+    f = svgd_rbf.svgd_force(t, g, ell, block_d=bd)
+    fr = ref.svgd_force(t, g, ell)
+    rel = jnp.abs(f - fr).max() / (jnp.abs(fr).max() + 1e-9)
+    assert rel < 2e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_svgd_force_dtypes(dtype):
+    t = (jax.random.normal(jax.random.PRNGKey(0), (4, 257)) * 0.05).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (4, 257)).astype(dtype)
+    f = svgd_rbf.svgd_force(t.astype(jnp.float32), g.astype(jnp.float32), 1.0,
+                            block_d=64)
+    assert f.shape == (4, 257)
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+def test_swag_moments_streaming():
+    """Streaming kernel moments == batch mean/second-moment after n updates."""
+    ps = [jax.random.normal(jax.random.PRNGKey(i), (123,)) for i in range(5)]
+    mean = jnp.zeros((123,))
+    sq = jnp.zeros((123,))
+    for i, p in enumerate(ps):
+        mean, sq = swag_moments.moments_flat(mean, sq, p, float(i))
+    stacked = jnp.stack(ps)
+    assert jnp.abs(mean - stacked.mean(0)).max() < 1e-5
+    assert jnp.abs(sq - (stacked ** 2).mean(0)).max() < 1e-5
+
+
+def test_swag_moments_pytree():
+    tree = {"a": jnp.ones((7, 3)), "b": jnp.full((11,), 2.0)}
+    zeros = jax.tree.map(jnp.zeros_like, tree)
+    m, s = swag_moments.update_moments(zeros, zeros, tree, 0.0)
+    assert jnp.abs(m["a"] - 1.0).max() < 1e-6
+    assert jnp.abs(s["b"] - 4.0).max() < 1e-6
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd,causal,qb,kb", [
+    (1, 64, 4, 2, 32, True, 16, 16),
+    (2, 50, 4, 1, 16, True, 16, 32),
+    (1, 128, 8, 8, 64, False, 32, 32),
+    (2, 33, 2, 2, 8, True, 16, 16),
+])
+def test_flash_kernel_vs_ref(B, S, H, KVH, hd, causal, qb, kb):
+    ks = jax.random.split(jax.random.PRNGKey(B * S), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    o = attention.flash_attention(q, k, v, causal=causal, q_block=qb, k_block=kb)
+    orf = ref.flash_attention(q, k, v, causal=causal)
+    assert jnp.abs(o - orf).max() < 2e-5
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_kernel_dtypes(dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32)).astype(dtype)
+    o = attention.flash_attention(q, k, v, causal=True, q_block=16, k_block=16)
+    orf = ref.flash_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=True)
+    assert jnp.abs(o.astype(jnp.float32) - orf).max() < tol
+
+
+@pytest.mark.parametrize("B,C,H,KVH,hd,cb,holes", [
+    (2, 64, 4, 2, 32, 16, False),
+    (1, 100, 8, 1, 16, 32, True),   # MQA + ring-cache holes + pad
+    (3, 33, 4, 4, 8, 16, True),
+])
+def test_decode_attention_kernel(B, C, H, KVH, hd, cb, holes):
+    from repro.kernels import decode_attention as dk
+    ks = jax.random.split(jax.random.PRNGKey(C), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, C, KVH, hd))
+    v = jax.random.normal(ks[2], (B, C, KVH, hd))
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C))
+    if holes:  # ring-cache style: some slots empty
+        mask = jax.random.bernoulli(ks[3], 0.8, (B, C))
+        pos = jnp.where(mask, pos, -1)
+    out = dk.decode_attention(q, k, v, pos, c_block=cb)
+    orf = ref.decode_attention(q, k, v, pos)
+    assert jnp.abs(out - orf).max() < 2e-5
+
+
+def test_decode_kernel_matches_model_decode_path():
+    """Pallas decode kernel == models.blocks.decode_attention."""
+    from repro.kernels import decode_attention as dk
+    from repro.models.blocks import decode_attention as model_dec
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, C, H, KVH, hd = 2, 40, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, C, KVH, hd))
+    v = jax.random.normal(ks[2], (B, C, KVH, hd))
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C))
+    a = dk.decode_attention(q, k, v, pos, c_block=16)
+    b = model_dec(q, k, v, k_pos=pos, cur_pos=C - 1)
+    assert jnp.abs(a - b).max() < 2e-5

@@ -1,0 +1,131 @@
+"""Particle abstraction semantics (paper §3.2-§3.3): messages, futures,
+views, the NEL particle cache, and error propagation."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ParticleModule, PushDistribution
+from repro.optim import sgd
+
+
+def _module():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (4, 4)), "b": jnp.zeros((4,))}
+
+    def loss(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2), {}
+
+    def fwd(p, batch):
+        return batch[0] @ p["w"] + p["b"]
+
+    return ParticleModule(init, loss, fwd)
+
+
+def _batch():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+    return (x, x @ (2.0 * jnp.eye(4)))
+
+
+def test_p_create_and_ids():
+    with PushDistribution(_module(), num_devices=1) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(3)]
+        assert pids == [0, 1, 2]
+        assert pd.particle_ids() == [0, 1, 2]
+        # particles are distinct random inits
+        w0 = pd.p_params(0)["w"]
+        w1 = pd.p_params(1)["w"]
+        assert float(jnp.abs(w0 - w1).max()) > 1e-3
+
+
+def test_gather_all_to_all():
+    """The paper's Fig. 1 _gather pattern."""
+    def _gather(particle):
+        others = [p for p in particle.particle_ids() if p != particle.pid]
+        futures = {p: particle.get(p) for p in others}
+        views = {p: f.wait() for p, f in futures.items()}
+        return {p: v.view().parameters()["w"].sum() for p, v in views.items()}
+
+    with PushDistribution(_module(), num_devices=1) as pd:
+        pids = [pd.p_create(receive={"GATHER": _gather}) for _ in range(4)]
+        res = pd.p_wait([pd.p_launch(pids[0], "GATHER")])[0]
+        assert sorted(res) == [1, 2, 3]
+
+
+def test_views_are_snapshots():
+    """A view taken before an update must not see the update (read-only copy)."""
+    with PushDistribution(_module(), num_devices=1) as pd:
+        a = pd.p_create(sgd(0.5))
+        b = pd.p_create(sgd(0.5))
+        view = pd.particles[b].get(a).wait()
+        before = view.parameters()["w"]
+        pd.particles[a].step(_batch()).wait()
+        after = pd.p_params(a)["w"]
+        assert float(jnp.abs(before - after).max()) > 0  # particle moved
+        assert jnp.array_equal(view.parameters()["w"], before)
+
+
+def test_step_trains():
+    with PushDistribution(_module(), num_devices=1) as pd:
+        pid = pd.p_create(sgd(0.1))
+        batch = _batch()
+        l0 = float(pd.particles[pid].step(batch).wait())
+        for _ in range(50):
+            l = float(pd.particles[pid].step(batch).wait())
+        assert l < l0 * 0.5
+
+
+def test_ensemble_predict_averages():
+    with PushDistribution(_module(), num_devices=1) as pd:
+        for _ in range(3):
+            pd.p_create()
+        batch = _batch()
+        pred = pd.p_predict(batch)
+        outs = [pd.particles[p].forward(batch).wait() for p in pd.particle_ids()]
+        manual = sum(outs) / len(outs)
+        assert jnp.abs(pred - manual).max() < 1e-5
+
+
+def test_particle_cache_swaps():
+    """More particles than cache_size -> LRU swap traffic is recorded."""
+    with PushDistribution(_module(), num_devices=1, cache_size=2) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        for _ in range(3):
+            pd.p_wait([pd.particles[p].step(_batch()) for p in pids])
+        assert pd.nel.stats["swaps_out"] > 0
+        assert pd.nel.stats["swaps_in"] >= pd.nel.stats["swaps_out"]
+
+
+def test_unknown_message_raises():
+    with PushDistribution(_module(), num_devices=1) as pd:
+        pd.p_create()
+        with pytest.raises(KeyError):
+            pd.p_launch(0, "NO_SUCH_MSG")
+
+
+def test_handler_error_propagates_via_future():
+    def bad(particle):
+        raise ValueError("boom")
+
+    with PushDistribution(_module(), num_devices=1) as pd:
+        pid = pd.p_create(receive={"BAD": bad})
+        fut = pd.p_launch(pid, "BAD")
+        with pytest.raises(ValueError, match="boom"):
+            fut.wait()
+
+
+def test_concurrent_sends_from_handler():
+    """Handlers can send+wait on other particles without deadlock."""
+    def relay(particle, depth):
+        if depth == 0:
+            return particle.pid
+        nxt = (particle.pid + 1) % len(particle.particle_ids())
+        return particle.send(nxt, "RELAY", depth - 1).wait()
+
+    with PushDistribution(_module(), num_devices=1) as pd:
+        pids = [pd.p_create(receive={"RELAY": relay}) for _ in range(3)]
+        out = pd.p_wait([pd.p_launch(pids[0], "RELAY", 5)])[0]
+        assert out == (0 + 5) % 3 == 2

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.bdl import pairwise_sqdist, svgd_force
+from repro.bdl.swag import swag_collect, swag_state_init
+from repro.data.loader import DataLoader
+from repro import configs
+
+SET = dict(deadline=None, max_examples=20)
+
+
+@settings(**SET)
+@given(n=st.integers(2, 6), d=st.integers(1, 16), seed=st.integers(0, 100))
+def test_sqdist_metric_properties(n, d, seed):
+    t = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    d2 = pairwise_sqdist(t)
+    assert float(jnp.abs(d2 - d2.T).max()) < 1e-4          # symmetry
+    assert float(jnp.diag(d2).max()) < 1e-4                # d(x,x)=0
+    assert float(d2.min()) >= -1e-5                        # non-negativity
+
+
+@settings(**SET)
+@given(n=st.integers(2, 5), d=st.integers(2, 8), seed=st.integers(0, 50))
+def test_svgd_force_permutation_equivariance(n, d, seed):
+    """svgd_force(P theta) == P svgd_force(theta) for particle permutations."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    theta = jax.random.normal(k1, (n, d))
+    grads = jax.random.normal(k2, (n, d))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), n)
+    f = svgd_force(theta, grads, 1.0)
+    fp = svgd_force(theta[perm], grads[perm], 1.0)
+    assert float(jnp.abs(f[perm] - fp).max()) < 1e-4
+
+
+@settings(**SET)
+@given(n=st.integers(2, 5), d=st.integers(2, 8), seed=st.integers(0, 50),
+       shift=st.floats(-3, 3))
+def test_svgd_force_translation_invariance(n, d, seed, shift):
+    """RBF kernel depends only on differences -> force is translation-inv."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    theta = jax.random.normal(k1, (n, d))
+    grads = jax.random.normal(k2, (n, d))
+    f1 = svgd_force(theta, grads, 1.0)
+    f2 = svgd_force(theta + shift, grads, 1.0)
+    assert float(jnp.abs(f1 - f2).max()) < 1e-3
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 50), n_steps=st.integers(1, 8))
+def test_swag_streaming_mean_matches_batch(seed, n_steps):
+    rng = jax.random.PRNGKey(seed)
+    thetas = []
+    st_ = None
+    for i in range(n_steps):
+        rng, sub = jax.random.split(rng)
+        th = {"w": jax.random.normal(sub, (17,))}
+        thetas.append(th)
+        if st_ is None:
+            st_ = swag_state_init(th, max_rank=4)
+        st_ = swag_collect(st_, th, use_kernel=False)
+    stacked = jnp.stack([t["w"] for t in thetas])
+    assert float(jnp.abs(st_["mean"]["w"] - stacked.mean(0)).max()) < 1e-4
+    var_emp = (stacked ** 2).mean(0) - stacked.mean(0) ** 2
+    var_swag = st_["sq_mean"]["w"] - st_["mean"]["w"] ** 2
+    assert float(jnp.abs(var_emp - var_swag).max()) < 1e-3
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 1000))
+def test_dataloader_deterministic(seed):
+    cfg = configs.get("qwen1.5-0.5b").smoke()
+    d1 = DataLoader(cfg, batch_size=2, seq_len=16, num_batches=2, seed=seed)
+    d2 = DataLoader(cfg, batch_size=2, seq_len=16, num_batches=2, seed=seed)
+    for b1, b2 in zip(d1, d2):
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 100), vocab=st.integers(8, 64))
+def test_lm_batch_labels_are_next_tokens(seed, vocab):
+    from repro.data.synthetic import lm_batch
+    b = lm_batch(np.random.default_rng(seed), 2, 16, vocab)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    assert b["tokens"].max() < vocab
+    # labels[t] is the stream's tokens shifted by one
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 30))
+def test_advection_exact_shift(seed):
+    from repro.data.synthetic import advection_batch
+    b = advection_batch(np.random.default_rng(seed), 2, L=64, c=1.0, dt=4.0)
+    assert np.allclose(np.roll(b["u0"], 4, axis=1), b["u1"])
