@@ -1,0 +1,117 @@
+"""Dispatch-throughput microbenchmark: thread-per-dispatch vs event loops.
+
+The seed runtime spawned a fresh Python thread for every dispatched
+message; the executor keeps persistent per-device loops with per-particle
+mailboxes. This benchmark measures raw messages/sec through both at a
+fixed particle count — the number the ISSUE-1 acceptance bar (>= 5x at 8
+particles) is checked against. The legacy dispatcher below is a faithful
+inline copy of the seed's ``NodeEventLoop.dispatch`` threading strategy,
+kept here (not in core) purely as the before-side of the comparison.
+
+Rows: dispatch/<impl>/p<particles>,us_per_message,msgs_per_sec=<rate>
+plus a final  dispatch/speedup/p<particles>,<ratio>,x_over_thread_per_msg
+summary row (second column numeric, like every row in the suite).
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+from repro.core import NodeEventLoop
+from repro.core.messages import PFuture
+
+
+class _LegacyThreadPerDispatch:
+    """The seed's dispatch strategy: one Python thread per message."""
+
+    def __init__(self):
+        self._threads = []
+        self._lock = threading.Lock()
+
+    def dispatch(self, pid, fn, *args, **kwargs) -> PFuture:
+        fut = PFuture()
+
+        def run():
+            try:
+                fut._resolve(fn(*args, **kwargs))
+            except BaseException as e:
+                fut._reject(e)
+
+        t = threading.Thread(target=run, daemon=True)
+        with self._lock:
+            self._threads = [th for th in self._threads if th.is_alive()]
+            self._threads.append(t)
+        t.start()
+        return fut
+
+    def shutdown(self):
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout=30)
+
+
+def _noop():
+    return None
+
+
+def _drive(dispatch, particles: int, messages: int) -> float:
+    """Round-robin `messages` no-op dispatches over `particles`; returns
+    wall seconds from first dispatch to last completion."""
+    t0 = time.perf_counter()
+    futs = [dispatch(i % particles, _noop) for i in range(messages)]
+    for f in futs:
+        f.wait()
+    return time.perf_counter() - t0
+
+
+def run(particles: int = 8, messages: int = 4000, iters: int = 3):
+    # --- legacy: thread per message ------------------------------------
+    legacy_best = float("inf")
+    for _ in range(iters):
+        legacy = _LegacyThreadPerDispatch()
+        legacy_best = min(legacy_best, _drive(legacy.dispatch, particles,
+                                              messages))
+        legacy.shutdown()
+    legacy_rate = messages / legacy_best
+    print(f"dispatch/thread-per-msg/p{particles},"
+          f"{legacy_best / messages * 1e6:.2f},"
+          f"msgs_per_sec={legacy_rate:.0f}", flush=True)
+
+    # --- executor: persistent per-device loops -------------------------
+    loop_best = float("inf")
+    for _ in range(iters):
+        nel = NodeEventLoop(num_devices=1)
+        for pid in range(particles):
+            nel.register(None)
+        loop_best = min(loop_best, _drive(
+            lambda pid, fn: nel.dispatch(pid, fn), particles, messages))
+        nel.shutdown()
+    loop_rate = messages / loop_best
+    print(f"dispatch/event-loop/p{particles},"
+          f"{loop_best / messages * 1e6:.2f},"
+          f"msgs_per_sec={loop_rate:.0f}", flush=True)
+
+    ratio = loop_rate / legacy_rate
+    print(f"dispatch/speedup/p{particles},{ratio:.2f},"
+          f"x_over_thread_per_msg", flush=True)
+    return ratio
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--particles", type=int, default=8)
+    ap.add_argument("--messages", type=int, default=4000)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--require", type=float, default=0.0,
+                    help="fail (exit 1) if speedup is below this ratio")
+    a = ap.parse_args()
+    ratio = run(a.particles, a.messages, a.iters)
+    if a.require and ratio < a.require:
+        raise SystemExit(
+            f"dispatch speedup {ratio:.2f}x below required {a.require}x")
+
+
+if __name__ == "__main__":
+    main()

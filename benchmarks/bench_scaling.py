@@ -5,7 +5,13 @@ particle count grows, through the Push particle runtime AND the paper's
 handwritten baselines, on the paper's three workload families adapted to
 this repo: ViT (vision), UNet-1D (PDE/SciML) and a tiny qwen-family LM.
 
+``--backend compiled`` additionally lowers each algorithm through the
+fused stacked-axis backend (DESIGN.md §3) — one XLA program over all
+particles — so the runtime's dispatch overhead can be read directly off
+the nel-vs-compiled gap at fixed particle count.
+
 Rows: scaling/<workload>/<algo>/<impl>/p<particles>,us_per_epoch,devices=<n>
+where <impl> in {push, compiled, baseline}.
 """
 from __future__ import annotations
 
@@ -26,63 +32,99 @@ def _data(cfg, num_batches: int, batch: int = 8):
     return [jax.tree.map(jnp.asarray, b) for b in dl]
 
 
+def _run_push(num_devices, arch, mod, data, n):
+    """Particle-runtime rows (backend="nel"): manual epoch drive so the
+    measured quantity is pure runtime + step time, not particle init."""
+    with DeepEnsemble(mod, num_devices=num_devices) as de:
+        pids = [de.push_dist.p_create(adam(1e-3)) for _ in range(n)]
+
+        def epoch():
+            for b in data:
+                de.push_dist.p_wait(
+                    [de.push_dist.particles[p].step(b) for p in pids])
+        us = timeit(lambda: epoch() or jnp.zeros(()))
+    emit(f"scaling/{arch}/ensemble/push/p{n}", us, f"devices={num_devices}")
+
+    with MultiSWAG(mod, num_devices=num_devices) as ms:
+        ms.bayes_infer(data[:1], 1, optimizer=adam(1e-3),
+                       num_particles=n, max_rank=4)  # build+jit
+        pids = ms.push_dist.particle_ids()
+
+        def epoch_sw():
+            for b in data:
+                ms.push_dist.p_wait(
+                    [ms.push_dist.particles[p].step(b) for p in pids])
+            ms.push_dist.p_wait(
+                [ms.push_dist.p_launch(p, "SWAG_COLLECT") for p in pids])
+        us = timeit(lambda: epoch_sw() or jnp.zeros(()))
+    emit(f"scaling/{arch}/multiswag/push/p{n}", us, f"devices={num_devices}")
+
+    with SteinVGD(mod, num_devices=num_devices) as sv:
+        sv.bayes_infer(data[:1], 1, num_particles=n, lr=1e-3)  # jit
+        us = timeit(lambda: sv.push_dist.p_wait(
+            [sv.push_dist.p_launch(0, "SVGD_LEADER", 1e-3, 1.0,
+                                   data, 1)]) and jnp.zeros(()))
+    emit(f"scaling/{arch}/svgd/push/p{n}", us, f"devices={num_devices}")
+
+
+def _run_compiled(num_devices, arch, mod, data, n):
+    """Fused-backend rows: the real backend="compiled" epoch path
+    (Infer._fused_epochs — stack, compiled loop, write back) on particles
+    created outside the timed region, so the rows are directly comparable
+    with the push/<n> rows (which also exclude particle creation)."""
+    opt = adam(1e-3)
+
+    with DeepEnsemble(mod, num_devices=num_devices, backend="compiled") as de:
+        pids = [de.push_dist.p_create(opt) for _ in range(n)]
+        de._fused_epochs(pids, data[:1], 1, optimizer=opt)  # build+jit
+        us = timeit(lambda: (de._fused_epochs(pids, data, 1, optimizer=opt),
+                             jnp.zeros(()))[1])
+    emit(f"scaling/{arch}/ensemble/compiled/p{n}", us,
+         f"devices={num_devices}")
+
+    with MultiSWAG(mod, num_devices=num_devices, backend="compiled") as ms:
+        pids = ms._create(opt, n, max_rank=4)
+        ms._fused_epochs(pids, data[:1], 1, optimizer=opt)  # build+jit
+        us = timeit(lambda: (ms._fused_epochs(pids, data, 1, optimizer=opt),
+                             jnp.zeros(()))[1])
+    emit(f"scaling/{arch}/multiswag/compiled/p{n}", us,
+         f"devices={num_devices}")
+
+    with SteinVGD(mod, num_devices=num_devices, backend="compiled") as sv:
+        pids = sv._create(n)
+        sv._fused_epochs(pids, data[:1], 1, lr=1e-3)  # build+jit
+        us = timeit(lambda: (sv._fused_epochs(pids, data, 1, lr=1e-3),
+                             jnp.zeros(()))[1])
+    emit(f"scaling/{arch}/svgd/compiled/p{n}", us,
+         f"devices={num_devices}")
+
+
+def _run_baselines(num_devices, arch, mod, data, n):
+    opt_b = adam(1e-3)
+    us = timeit(
+        lambda: (baselines.ensemble_baseline(mod, opt_b, n,
+                                             data, 1), jnp.zeros(()))[1],
+        iters=2)
+    emit(f"scaling/{arch}/ensemble/baseline/p{n}", us,
+         f"devices={num_devices}")
+
+    us = timeit(lambda: (baselines.svgd_baseline(
+        mod, n, data, 1, lr=1e-3), jnp.zeros(()))[1], iters=2)
+    emit(f"scaling/{arch}/svgd/baseline/p{n}", us,
+         f"devices={num_devices}")
+
+
 def run(num_devices: int = 1, particles=(1, 2, 4), num_batches: int = 3,
-        workloads=("vit-mnist", "unet-advection", "qwen1.5-0.5b")):
+        workloads=("vit-mnist", "unet-advection", "qwen1.5-0.5b"),
+        backend: str = "nel"):
     for arch in workloads:
         mod = tiny_module(arch)
         data = _data(mod.cfg, num_batches)
-
         for n in particles:
-            # --- deep ensemble (Push) -----------------------------------
-            with DeepEnsemble(mod, num_devices=num_devices) as de:
-                pids = [de.push_dist.p_create(adam(1e-3)) for _ in range(n)]
-
-                def epoch():
-                    for b in data:
-                        de.push_dist.p_wait(
-                            [de.push_dist.particles[p].step(b) for p in pids])
-                us = timeit(lambda: epoch() or jnp.zeros(()))
-            emit(f"scaling/{arch}/ensemble/push/p{n}", us,
-                 f"devices={num_devices}")
-
-            # --- multi-SWAG (Push) ---------------------------------------
-            with MultiSWAG(mod, num_devices=num_devices) as ms:
-                ms.bayes_infer(data[:1], 1, optimizer=adam(1e-3),
-                               num_particles=n, max_rank=4)  # build+jit
-                pids = ms.push_dist.particle_ids()
-
-                def epoch_sw():
-                    for b in data:
-                        ms.push_dist.p_wait(
-                            [ms.push_dist.particles[p].step(b) for p in pids])
-                    ms.push_dist.p_wait(
-                        [ms.push_dist.p_launch(p, "SWAG_COLLECT") for p in pids])
-                us = timeit(lambda: epoch_sw() or jnp.zeros(()))
-            emit(f"scaling/{arch}/multiswag/push/p{n}", us,
-                 f"devices={num_devices}")
-
-            # --- SVGD (Push, message passing) ----------------------------
-            with SteinVGD(mod, num_devices=num_devices) as sv:
-                sv.bayes_infer(data[:1], 1, num_particles=n, lr=1e-3)  # jit
-                us = timeit(lambda: sv.push_dist.p_wait(
-                    [sv.push_dist.p_launch(0, "SVGD_LEADER", 1e-3, 1.0,
-                                           data, 1)]) and jnp.zeros(()))
-            emit(f"scaling/{arch}/svgd/push/p{n}", us,
-                 f"devices={num_devices}")
-
-            # --- handwritten baselines (paper Fig. 4 grey curves) ---------
-            opt_b = adam(1e-3)
-            us = timeit(
-                lambda: (baselines.ensemble_baseline(mod, opt_b, n,
-                                                     data, 1), jnp.zeros(()))[1],
-                iters=2)
-            emit(f"scaling/{arch}/ensemble/baseline/p{n}", us,
-                 f"devices={num_devices}")
-
-            us = timeit(lambda: (baselines.svgd_baseline(
-                mod, n, data, 1, lr=1e-3), jnp.zeros(()))[1], iters=2)
-            emit(f"scaling/{arch}/svgd/baseline/p{n}", us,
-                 f"devices={num_devices}")
+            _run_push(num_devices, arch, mod, data, n)
+            if backend == "compiled":  # additionally: the nel-vs-compiled gap
+                _run_compiled(num_devices, arch, mod, data, n)
+            _run_baselines(num_devices, arch, mod, data, n)
 
 
 def main():
@@ -90,8 +132,9 @@ def main():
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--particles", type=int, nargs="+", default=[1, 2, 4])
     ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--backend", choices=("nel", "compiled"), default="nel")
     a = ap.parse_args()
-    run(a.devices, tuple(a.particles), a.batches)
+    run(a.devices, tuple(a.particles), a.batches, backend=a.backend)
 
 
 if __name__ == "__main__":

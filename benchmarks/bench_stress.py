@@ -1,10 +1,14 @@
 """Paper Table 2 / Appendix C.3 stress test: many small particles through
 the NEL, with the particle cache oversubscribed (cache_size < particles).
 
-Reports time per epoch and the NEL's swap statistics — the paper's
-"swapping particles on and off the accelerator is even more costly" story.
+Reports time per epoch, the NEL's swap statistics — the paper's
+"swapping particles on and off the accelerator is even more costly"
+story — and the executor's dispatch instrumentation (peak queue depth,
+cumulative wait-vs-run time), which localizes whether oversubscription
+cost is paid in swapping or in queueing.
 
-Rows: stress/p<particles>_cache<size>,us_per_epoch,swaps=<in>/<out>
+Rows: stress/p<particles>_cache<size>,us_per_epoch,
+      swaps=<in>/<out> qdepth=<max> wait_ms=<t> run_ms=<t>
 """
 from __future__ import annotations
 
@@ -35,8 +39,12 @@ def run(counts=(8, 16, 32), cache_sizes=(4, 32), num_batches: int = 2):
                             [de.push_dist.particles[p].step(b) for p in pids])
                 us = timeit(lambda: epoch() or jnp.zeros(()), iters=2)
                 st = de.push_dist.nel.stats
+                ex = de.push_dist.nel.executor.stats()
                 emit(f"stress/p{n}_cache{cache}", us,
-                     f"swaps={st['swaps_in']}/{st['swaps_out']}")
+                     f"swaps={st['swaps_in']}/{st['swaps_out']} "
+                     f"qdepth={ex['max_queue_depth']} "
+                     f"wait_ms={ex['wait_time_s'] * 1e3:.0f} "
+                     f"run_ms={ex['run_time_s'] * 1e3:.0f}")
 
 
 def main():

@@ -9,6 +9,7 @@ which trends are wall-clock-faithful vs structurally validated.
   bench_stress           Table 2 / C.3    (particle-cache oversubscription)
   bench_accuracy         Tables 3-4       (multi-SWAG vs standard accuracy)
   bench_kernels          (ours)           Pallas kernels + SVGD impls
+  bench_dispatch         (ours)           event-loop vs thread-per-dispatch
 """
 import argparse
 import sys
@@ -19,14 +20,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. kernels,stress")
     args = ap.parse_args()
-    from . import (bench_accuracy, bench_depth_particles, bench_kernels,
-                   bench_scaling, bench_stress)
+    from . import (bench_accuracy, bench_depth_particles, bench_dispatch,
+                   bench_kernels, bench_scaling, bench_stress)
     table = {
         "scaling": bench_scaling.run,
         "depth_particles": bench_depth_particles.run,
         "stress": bench_stress.run,
         "accuracy": bench_accuracy.run,
         "kernels": bench_kernels.run,
+        "dispatch": bench_dispatch.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")

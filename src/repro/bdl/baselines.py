@@ -5,6 +5,11 @@ sequential-over-networks, no particle abstraction. The SVGD baseline
 materializes the full kernel matrix and updates all parameters only after
 the kernel matrix is computed, keeping one copy of each NN (paper §5.1's
 description verbatim).
+
+Not to be confused with ``backend="compiled"`` (DESIGN.md §3): the
+compiled backend is *fused* (vmapped over a stacked particle axis, one
+XLA program); these baselines are deliberately sequential Python loops —
+the grey curves the particle runtime is measured against.
 """
 from __future__ import annotations
 

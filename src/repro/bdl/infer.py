@@ -1,6 +1,14 @@
 """Infer base class (paper App. B): BDL algorithms extend Infer and express
 inference as concurrent procedures on particles. The same algorithm code is
-agnostic to the number of devices (paper §B.2 comment 2)."""
+agnostic to the number of devices (paper §B.2 comment 2).
+
+Backend seam (DESIGN.md §3): ``bayes_infer`` is the stable entry point.
+Subclasses implement ``_nel_infer`` (the paper-faithful message-passing
+procedure) and may implement ``_fused_infer`` (the compiled stacked-axis
+form from core/functional.py). Under ``backend="compiled"`` the fused form
+is selected transparently when present; algorithms without one fall back
+to the NEL path, so every algorithm runs under either backend.
+"""
 from __future__ import annotations
 
 from typing import Callable, Optional
@@ -12,15 +20,32 @@ from ..core import ParticleModule, PushDistribution
 
 class Infer:
     def __init__(self, module: ParticleModule, *, num_devices: int = 1,
-                 cache_size: int = 4, view_size: int = 4, seed: int = 0):
+                 cache_size: int = 4, view_size: int = 4, seed: int = 0,
+                 backend: str = "nel"):
         self.module = module
         self.num_devices = num_devices
         self.push_dist = PushDistribution(module, num_devices=num_devices,
                                           cache_size=cache_size,
-                                          view_size=view_size, seed=seed)
+                                          view_size=view_size, seed=seed,
+                                          backend=backend)
+
+    @property
+    def backend(self) -> str:
+        return self.push_dist.backend
+
+    def _has_fused(self) -> bool:
+        return type(self)._fused_infer is not Infer._fused_infer
 
     def bayes_infer(self, dataloader, epochs: int, **kw):
+        if self.backend == "compiled" and self._has_fused():
+            return self._fused_infer(dataloader, epochs, **kw)
+        return self._nel_infer(dataloader, epochs, **kw)
+
+    def _nel_infer(self, dataloader, epochs: int, **kw):
         raise NotImplementedError
+
+    def _fused_infer(self, dataloader, epochs: int, **kw):
+        raise NotImplementedError  # overriding marks the algorithm as fusable
 
     def posterior_pred(self, batch):
         return self.push_dist.p_predict(batch)

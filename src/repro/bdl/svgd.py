@@ -9,9 +9,11 @@ Two implementations, benchmarked against each other in EXPERIMENTS.md §Perf:
    particle. Updates are applied concurrently from read-only snapshots —
    the property the paper credits for beating its monolithic baseline.
 
-2. ``fused_svgd_step`` — the beyond-paper compiled path: stacked particle
-   axis, flattened (n, D) parameter matrix, RBF kernel + driving force in
-   one XLA program (Pallas kernels on TPU; jnp oracle elsewhere).
+2. ``fused_svgd_step`` — the compiled path (``backend="compiled"``):
+   stacked particle axis, flattened (n, D) parameter matrix, RBF kernel +
+   driving force in one XLA program (Pallas kernels on TPU; jnp oracle
+   elsewhere). ``SteinVGD._fused_infer`` drives it on the same particles
+   the NEL path would create.
 
 Update rule (standard SVGD, descent form; see DESIGN.md for the sign
 discrepancy in the paper's Fig. 6 listing):
@@ -148,8 +150,7 @@ def _svgd_leader(particle, lr, lengthscale, dataloader, epochs):
 
 
 class SteinVGD(Infer):
-    def bayes_infer(self, dataloader, epochs: int, *, num_particles: int = 4,
-                    lengthscale: float = 1.0, lr: float = 1e-3):
+    def _create(self, num_particles: int):
         pid_leader = self.push_dist.p_create(
             None, device=0, receive={"SVGD_LEADER": _svgd_leader,
                                      "SVGD_STEP": _svgd_step,
@@ -160,6 +161,36 @@ class SteinVGD(Infer):
                 None, device=(p + 1) % self.num_devices,
                 receive={"SVGD_STEP": _svgd_step, "SVGD_FOLLOW": _svgd_follow})
             pids.append(pid)
+        return pids
+
+    def _nel_infer(self, dataloader, epochs: int, *, num_particles: int = 4,
+                   lengthscale: float = 1.0, lr: float = 1e-3):
+        pids = self._create(num_particles)
         losses = self.push_dist.p_wait([self.push_dist.p_launch(
-            pid_leader, "SVGD_LEADER", lr, lengthscale, dataloader, epochs)])[0]
+            pids[0], "SVGD_LEADER", lr, lengthscale, dataloader, epochs)])[0]
         return pids, losses
+
+    def _fused_infer(self, dataloader, epochs: int, *, num_particles: int = 4,
+                     lengthscale: float = 1.0, lr: float = 1e-3):
+        """Compiled stacked-axis SVGD: identical particles (same rng stream
+        as the NEL path), the whole kernel step in one XLA program."""
+        pids = self._create(num_particles)
+        losses = self._fused_epochs(pids, dataloader, epochs, lr=lr,
+                                    lengthscale=lengthscale)
+        return pids, losses
+
+    def _fused_epochs(self, pids, dataloader, epochs: int, *,
+                      lr: float = 1e-3, lengthscale: float = 1.0):
+        pd = self.push_dist
+        stacked = pd.p_stack(pids)
+        if getattr(self, "_step_key", None) != (lr, lengthscale):
+            self._step_key = (lr, lengthscale)
+            self._step = jax.jit(fused_svgd_step(self.module.loss, lr=lr,
+                                                 lengthscale=lengthscale))
+        losses = []
+        for _ in range(epochs):
+            for batch in dataloader:
+                stacked, ls = self._step(stacked, batch)
+                losses = [float(l) for l in ls]
+        pd.p_unstack(pids, stacked)
+        return losses

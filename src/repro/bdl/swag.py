@@ -106,9 +106,7 @@ def _swag_collect_msg(particle):
 
 
 class MultiSWAG(Infer):
-    def bayes_infer(self, dataloader, epochs: int, *, optimizer,
-                    num_particles: int = 4, pretrain_epochs: int = 0,
-                    max_rank: int = 20):
+    def _create(self, optimizer, num_particles, max_rank):
         pids = []
         for _ in range(num_particles):
             pid = self.push_dist.p_create(
@@ -116,6 +114,12 @@ class MultiSWAG(Infer):
             p = self.push_dist.particles[pid]
             p.state["swag"] = swag_state_init(p.state["params"], max_rank)
             pids.append(pid)
+        return pids
+
+    def _nel_infer(self, dataloader, epochs: int, *, optimizer,
+                   num_particles: int = 4, pretrain_epochs: int = 0,
+                   max_rank: int = 20):
+        pids = self._create(optimizer, num_particles, max_rank)
         losses = []
         for e in range(epochs):
             for batch in dataloader:
@@ -126,6 +130,43 @@ class MultiSWAG(Infer):
                         for pid in pids]
                 self.push_dist.p_wait(futs)
         return pids, losses
+
+    def _fused_infer(self, dataloader, epochs: int, *, optimizer,
+                     num_particles: int = 4, pretrain_epochs: int = 0,
+                     max_rank: int = 20):
+        pids = self._create(optimizer, num_particles, max_rank)
+        losses = self._fused_epochs(pids, dataloader, epochs,
+                                    optimizer=optimizer,
+                                    pretrain_epochs=pretrain_epochs)
+        return pids, losses
+
+    def _fused_epochs(self, pids, dataloader, epochs: int, *, optimizer,
+                      pretrain_epochs: int = 0):
+        """Stacked-axis multi-SWAG on existing particles: vmapped train step
+        + vmapped moment collection (swag_collect is jittable by
+        construction); results written back per particle."""
+        from ..core import functional
+        pd = self.push_dist
+        stacked = pd.p_stack(pids)
+        opt_state = pd.p_stack(pids, key="opt_state")
+        swag_state = pd.p_stack(pids, key="swag")
+        if getattr(self, "_step_key", None) != id(optimizer):
+            self._step_key = id(optimizer)
+            self._step = jax.jit(
+                functional.ensemble_step(self.module.loss, optimizer))
+            self._collect = jax.jit(jax.vmap(
+                lambda s, p: swag_collect(s, p, use_kernel=False)))
+        losses = []
+        for e in range(epochs):
+            for batch in dataloader:
+                stacked, opt_state, ls = self._step(stacked, opt_state, batch)
+                losses = [float(l) for l in ls]
+            if e >= pretrain_epochs:
+                swag_state = self._collect(swag_state, stacked)
+        pd.p_unstack(pids, stacked)
+        pd.p_unstack(pids, opt_state, key="opt_state")
+        pd.p_unstack(pids, swag_state, key="swag")
+        return losses
 
     def sample_predict(self, batch, *, samples_per_particle: int = 5,
                        rng=None, scale: float = 1.0):

@@ -1,11 +1,13 @@
 # The paper's primary contribution: the particle abstraction for BDL.
+# executor.py  — persistent per-device event loops + lightweight pool
 # nel.py       — node event loop (particle->device table, active-set cache)
 # particle.py  — Particle (local state + messaging), ParticleModule
 # pd.py        — PushDistribution (P(nn_Theta) as a set of particles)
 # messages.py  — PFuture / ParticleView (async-await + read-only views)
-# functional.py— compiled stacked-particle fast path (beyond-paper)
+# functional.py— compiled stacked-particle fast path (the "compiled" backend)
+from .executor import Executor
 from .messages import PFuture, ParticleView, resolved, snapshot
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
-from .pd import PushDistribution
+from .pd import BACKENDS, PushDistribution
 from . import functional

@@ -1,32 +1,39 @@
 """Node Event Loop (paper §4.2) — the particle runtime.
 
-A NEL owns (1) a particle-to-device lookup table and (2) a context-
-switching dispatch mechanism with a per-device *active set* (the particle
-cache): at most ``cache_size`` particles are resident per device; others
-are swapped off the accelerator and paged back in on demand (LRU).
+A NEL owns (1) a particle-to-device lookup table, (2) a per-device
+*active set* (the particle cache): at most ``cache_size`` particles are
+resident per device; others are swapped off the accelerator and paged
+back in on demand (LRU), and (3) a persistent ``Executor`` — one
+long-lived worker loop per device plus a shared lightweight pool
+(executor.py). ``dispatch`` *enqueues* one hop of a particle's logical
+timeline onto its device's loop; no threads are ever created per
+message.
 
 Faithful-to-paper mechanics, adapted to JAX:
   * "device" = a jax.Device. On this CPU container there is one physical
     device; benchmarks fork subprocesses with
     ``--xla_force_host_platform_device_count=N`` to emulate N devices, and
     on a real TPU node the same code addresses the local TPU chips.
-  * message handlers run on a shared pool — each dispatch is one hop of a
-    particle's logical timeline (actor model). *Device* work (forward /
-    backward / parameter updates) additionally takes the target device's
-    lock, which serializes compute per device while letting different
-    devices progress concurrently (the paper's Fig. 3b: T4a/4b/4c overlap,
-    the device is locked at label 3 and freed at label 8).
-  * lightweight state reads (``get``/views) skip the device lock — the
-    paper's observation that same-device communication "can be eliminated".
+  * *device* work (forward / backward / parameter updates) runs on the
+    target device's single worker loop, which serializes compute per
+    device while letting different devices progress concurrently (the
+    paper's Fig. 3b: T4a/4b/4c overlap; the worker loop plays the role
+    of the lock held from label 3 to label 8).
+  * messages to one particle execute in FIFO send order (per-particle
+    mailboxes); distinct particles on a device round-robin.
+  * lightweight state reads (``get``/views) run on the shared pool and
+    never queue behind device compute — the paper's observation that
+    same-device communication "can be eliminated".
   * ``send`` returns immediately with a PFuture (async-await).
 
-Handlers may freely send-and-wait on other particles: nested dispatches
-run on their own pool threads, so a blocked handler never starves the
-particle it is waiting on (the paper gets the same property from its
-call-stack context switch).
+Handlers may freely send-and-wait on other particles: a blocked handler
+context-switches its worker into servicing the device queue (the
+paper's call-stack context switch — see Executor._make_wait_hook), so a
+waiting handler never starves the particle it is waiting on.
 
-Instrumentation (`stats`) counts dispatches, swaps and cross-device
-transfers — the quantities the paper's §5 scaling discussion reasons about.
+Instrumentation (`stats` + `executor.stats()`) counts dispatches, swaps,
+cross-device transfers, queue depths and wait-vs-run time — the
+quantities the paper's §5 scaling discussion reasons about.
 """
 from __future__ import annotations
 
@@ -36,12 +43,14 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
+from .executor import Executor
 from .messages import PFuture
 
 
 class NodeEventLoop:
     def __init__(self, num_devices: Optional[int] = None, cache_size: int = 4,
-                 offload: bool = False):
+                 offload: bool = False, max_pending: int = 4096,
+                 pool_size: Optional[int] = None):
         all_devices = jax.devices()
         if num_devices is None:
             num_devices = len(all_devices)
@@ -55,16 +64,16 @@ class NodeEventLoop:
         # particle-to-device lookup table
         self._device_of: Dict[int, int] = {}
         self._particles: Dict[int, Any] = {}
-        # per-device active set (LRU particle cache) + device locks
+        # per-device active set (LRU particle cache)
         self._active: List[OrderedDict] = [OrderedDict() for _ in range(num_devices)]
         self._cache_locks = [threading.Lock() for _ in range(num_devices)]
-        self.device_locks = [threading.Lock() for _ in range(num_devices)]
         self._next_pid = 0
-        self._threads: List[threading.Thread] = []
-        self._threads_lock = threading.Lock()
         self.stats = {"dispatches": 0, "swaps_in": 0, "swaps_out": 0,
                       "xdev_transfers": 0}
         self._stats_lock = threading.Lock()
+        # persistent per-device worker loops + shared lightweight pool
+        self.executor = Executor(num_devices, device_prep=self._device_prep,
+                                 pool_size=pool_size, max_pending=max_pending)
 
     # ------------------------------------------------------------------
     def register(self, particle, device: Optional[int] = None) -> int:
@@ -73,6 +82,7 @@ class NodeEventLoop:
         dev = device if device is not None else pid % len(self.devices)
         self._device_of[pid] = dev
         self._particles[pid] = particle
+        self.executor.add_particle(pid, dev)
         return pid
 
     def device_of(self, pid: int) -> jax.Device:
@@ -91,6 +101,11 @@ class NodeEventLoop:
     # ------------------------------------------------------------------
     # active-set / particle-cache management (paper's context switching)
     # ------------------------------------------------------------------
+    def _device_prep(self, dev_idx: int, pid: int):
+        # pool items (dev_idx == -1) never prep a device
+        if dev_idx >= 0:
+            self.ensure_resident(pid)
+
     def ensure_resident(self, pid: int):
         dev_idx = self._device_of[pid]
         dev = self.devices[dev_idx]
@@ -115,31 +130,16 @@ class NodeEventLoop:
     # dispatch: one hop of particle `pid`'s timeline
     # ------------------------------------------------------------------
     def dispatch(self, pid: int, fn: Callable, *args,
-                 needs_device: bool = False, **kwargs) -> PFuture:
-        fut = PFuture()
-        dev_idx = self._device_of[pid]
+                 needs_device: bool = False, lightweight: bool = False,
+                 **kwargs) -> PFuture:
         self._bump("dispatches")
+        return self.executor.submit(pid, fn, args, kwargs,
+                                    needs_device=needs_device,
+                                    lightweight=lightweight)
 
-        def run():
-            try:
-                if needs_device:
-                    with self.device_locks[dev_idx]:        # paper label 3/8
-                        self.ensure_resident(pid)
-                        fut._resolve(fn(*args, **kwargs))
-                else:
-                    fut._resolve(fn(*args, **kwargs))
-            except BaseException as e:  # surfaced on wait()
-                fut._reject(e)
-
-        t = threading.Thread(target=run, daemon=True)
-        with self._threads_lock:
-            self._threads = [th for th in self._threads if th.is_alive()]
-            self._threads.append(t)
-        t.start()
-        return fut
+    def drain(self, timeout: Optional[float] = None):
+        """Block until every dispatched message has run to completion."""
+        self.executor.drain(timeout)
 
     def shutdown(self):
-        with self._threads_lock:
-            threads = list(self._threads)
-        for t in threads:
-            t.join(timeout=30)
+        self.executor.shutdown(drain=True)

@@ -90,7 +90,10 @@ class Particle:
                                 None if _t.state["grads"] is None
                                 else snapshot(_t.state["grads"]))
 
-        return self.nel.dispatch(pid, grab, target)
+        # lock-free read: runs on the shared pool, never queues behind the
+        # target device's compute (paper §4.2 — same-device communication
+        # "can be eliminated")
+        return self.nel.dispatch(pid, grab, target, lightweight=True)
 
     # -- local NN computations (dispatched to this particle's device) -------
     def step(self, batch) -> PFuture:

@@ -10,6 +10,19 @@ API mirrors the paper's Fig. 2:
     pids = [pd.p_create(optimizer=..., receive={"GATHER": _gather})
             for _ in range(n)]
     pd.p_wait([pd.p_launch(pids[0], "GATHER")])
+
+Runtime backends (DESIGN.md §3):
+  * ``backend="nel"`` (default) — every message runs through the actor
+    runtime (persistent per-device event loops, executor.py).
+  * ``backend="compiled"`` — Infer algorithms with a fused stacked-axis
+    form (ensemble/SWAG/SVGD) run through core/functional.py instead:
+    one XLA program over all particles. Particles still exist — fused
+    params/opt/SWAG state are written back via ``p_unstack`` — so views,
+    messaging and ``p_predict`` behave identically. (One deliberate gap:
+    ``gradients()`` stays None after a fused run — intermediate grads
+    live inside the XLA program and are not materialized per step the
+    way the NEL path's ``grad()`` dispatches are.) Algorithms without a
+    fused form transparently fall back to the NEL path.
 """
 from __future__ import annotations
 
@@ -17,18 +30,25 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 
+from . import functional
 from .messages import PFuture
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
+
+BACKENDS = ("nel", "compiled")
 
 
 class PushDistribution:
     def __init__(self, module: ParticleModule, *, num_devices: Optional[int] = None,
                  cache_size: int = 4, view_size: int = 4, seed: int = 0,
-                 offload: bool = False):
+                 offload: bool = False, backend: str = "nel",
+                 max_pending: int = 4096):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.module = module
+        self.backend = backend
         self.nel = NodeEventLoop(num_devices=num_devices, cache_size=cache_size,
-                                 offload=offload)
+                                 offload=offload, max_pending=max_pending)
         self.view_size = view_size
         self._rng = jax.random.PRNGKey(seed)
         self.particles: Dict[int, Particle] = {}
@@ -70,12 +90,28 @@ class PushDistribution:
     def particle_ids(self) -> List[int]:
         return self.nel.particle_ids()
 
+    # -- compiled-backend bridge (stacked particle axis) --------------------
+    def p_stack(self, pids: Sequence[int], key: str = "params"):
+        """Stack a per-particle state entry on a leading particle axis."""
+        return functional.stack_pytrees(
+            [self.particles[pid].state[key] for pid in pids])
+
+    def p_unstack(self, pids: Sequence[int], stacked, key: str = "params"):
+        """Write a fused result back into per-particle state (index i -> pid_i),
+        so views/messaging/prediction see exactly what the NEL path would."""
+        trees = functional.unstack_pytree(stacked, len(pids))
+        for pid, tree in zip(pids, trees):
+            self.particles[pid].state[key] = tree
+
     # -- ensemble-style prediction over all particles -----------------------
     def p_predict(self, batch):
         """hat f(x) = (1/n) sum_i nn_{theta_i}(x) (paper §3.4)."""
         futs = [self.particles[pid].forward(batch) for pid in self.particle_ids()]
         outs = [f.wait() for f in futs]
         return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)
+
+    def drain(self, timeout: Optional[float] = None):
+        self.nel.drain(timeout)
 
     def cleanup(self):
         self.nel.shutdown()

@@ -130,7 +130,13 @@ def _split_call(rest: str) -> Tuple[List[str], str]:
             if depth == 0:
                 inner, attrs = rest[:i], rest[i + 1:]
                 ops = [t.strip() for t in _split_params(inner)]
-                names = [t for t in ops if t.startswith("%")]
+                # older XLA prints operand types ("f32[8,8]{1,0} %x"); newer
+                # prints bare names ("%x") — the name is the last token
+                names = []
+                for t in ops:
+                    tok = t.split()[-1] if t else ""
+                    if tok.startswith("%"):
+                        names.append(tok)
                 # keep the raw call payload in front of attrs: constant
                 # literals (trip counts) live there
                 return names, inner + " ## " + attrs

@@ -1,21 +1,39 @@
 """Production mesh factory (functions only — importing never touches jax
-device state; the dry-run sets XLA_FLAGS before any jax import)."""
+device state; the dry-run sets XLA_FLAGS before any jax import).
+
+``AxisType`` (explicit-sharding axis annotations) only exists in newer jax
+releases; ``make_mesh`` shims it so the same call sites work on any
+installed version — older jax simply builds the mesh without axis types
+(every axis behaves as Auto there anyway).
+"""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # newer jax: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: all axes are implicitly Auto
+    AxisType = None
+
+HAS_AXIS_TYPES = AxisType is not None
+
+
+def make_mesh(shape, axes):
+    """Version-portable ``jax.make_mesh`` with Auto axis types when available."""
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e: 16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_bench_mesh(n_devices: int, model: int = 1):
     """Small mesh for CPU benchmarks (forced host devices)."""
     data = n_devices // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))

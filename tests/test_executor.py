@@ -1,0 +1,302 @@
+"""Executor semantics (paper §4.2 runtime): per-particle FIFO mailboxes,
+fixed thread count, cross-device concurrency, context switching on wait,
+bounded queues, graceful shutdown — and the backend seam: ``nel`` and
+``compiled`` backends must produce numerically matching posteriors.
+
+The Executor is jax-free by design (device residency is injected by the
+NEL), so the scheduling tests below exercise it directly with plain
+Python callables — no accelerator state involved.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.bdl import DeepEnsemble, MultiSWAG, SteinVGD
+from repro.core import Executor, ParticleModule, PushDistribution
+from repro.optim import sgd
+
+
+def _executor(n_devices=1, **kw):
+    ex = Executor(n_devices, **kw)
+    for pid in range(8):
+        ex.add_particle(pid, pid % n_devices)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# scheduling semantics
+# ---------------------------------------------------------------------------
+
+def test_mailbox_fifo_per_particle():
+    """Messages to one particle run in send order; interleaved sends to a
+    second particle must not reorder them."""
+    ex = _executor()
+    log = []
+    futs = []
+    for i in range(200):
+        futs.append(ex.submit(0, lambda i=i: log.append(("p0", i))))
+        futs.append(ex.submit(1, lambda i=i: log.append(("p1", i))))
+    for f in futs:
+        f.wait()
+    ex.shutdown()
+    for pid in ("p0", "p1"):
+        seq = [i for p, i in log if p == pid]
+        assert seq == sorted(seq), f"{pid} ran out of FIFO order"
+    assert len(log) == 400
+
+
+def test_no_thread_growth_across_1k_dispatches():
+    """Workers are created once at construction: 1k dispatches (device and
+    lightweight) must not create a single extra thread."""
+    ex = _executor()
+    # warm up, then snapshot
+    ex.submit(0, lambda: None).wait()
+    before = threading.active_count()
+    futs = [ex.submit(i % 8, lambda: None, lightweight=(i % 3 == 0))
+            for i in range(1000)]
+    during = threading.active_count()
+    for f in futs:
+        f.wait()
+    after = threading.active_count()
+    ex.shutdown()
+    assert during <= before
+    assert after <= before
+    assert ex.stats()["completed"] >= 1001
+    assert ex.stats()["threads"] == ex.num_threads
+
+
+def test_cross_device_send_concurrency():
+    """Two particles on different devices run truly concurrently: each
+    handler blocks on a shared barrier that only opens when both arrived."""
+    ex = _executor(n_devices=2)
+    barrier = threading.Barrier(2, timeout=10)
+    futs = [ex.submit(0, barrier.wait), ex.submit(1, barrier.wait)]
+    # both resolve only if dev0's and dev1's loops overlap in time
+    for f in futs:
+        f.wait(timeout=10)
+    ex.shutdown()
+
+
+def test_nested_send_and_wait_context_switch():
+    """A handler that waits on work queued behind it on the SAME device must
+    not deadlock — the worker context-switches into its queue (paper §4.2)."""
+    ex = _executor(n_devices=1)
+
+    def outer():
+        inner = ex.submit(1, lambda: "inner-done")
+        return inner.wait(timeout=10)
+
+    assert ex.submit(0, outer).wait(timeout=10) == "inner-done"
+    ex.shutdown()
+
+
+def test_bounded_queue_backpressure():
+    """External submitters block once a device queue holds max_pending
+    messages — memory cannot grow without bound."""
+    ex = Executor(1, max_pending=4)
+    ex.add_particle(0, 0)
+    release = threading.Event()
+    first = ex.submit(0, lambda: release.wait(10))
+    depths = []
+
+    def flood():
+        for _ in range(12):
+            ex.submit(0, lambda: None)
+
+    t = threading.Thread(target=flood, daemon=True)
+    t.start()
+    time.sleep(0.3)
+    depths.append(max(ex.queue_depths()))
+    assert t.is_alive(), "submitter should be blocked on the full queue"
+    assert depths[0] <= 4
+    release.set()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    ex.drain(timeout=10)
+    ex.shutdown()
+
+
+def test_clean_shutdown_with_inflight_work():
+    """shutdown(drain=True) finishes queued + running messages before the
+    loops stop; nothing is dropped, no waiter hangs."""
+    ex = _executor()
+    done = []
+    futs = [ex.submit(0, lambda i=i: (time.sleep(0.02), done.append(i))[1])
+            for i in range(10)]
+    ex.shutdown()  # drain=True default: all 10 must have run
+    assert sorted(done) == list(range(10))
+    for f in futs:
+        f.wait(timeout=1)
+    with pytest.raises(RuntimeError):
+        ex.submit(0, lambda: None)
+
+
+def test_shutdown_rejects_leftovers_without_drain():
+    ex = _executor()
+    block = threading.Event()
+    ex.submit(0, lambda: block.wait(5))
+    stuck = [ex.submit(0, lambda: None) for _ in range(3)]
+    ex.shutdown(drain=False, timeout=1)
+    block.set()
+    # queued-behind work is rejected so waiters never hang
+    rejected = 0
+    for f in stuck:
+        try:
+            f.wait(timeout=5)
+        except RuntimeError:
+            rejected += 1
+    assert rejected >= 1
+
+
+def test_dispatch_stats_wait_vs_run():
+    ex = _executor()
+    futs = [ex.submit(0, lambda: time.sleep(0.01)) for _ in range(5)]
+    for f in futs:
+        f.wait()
+    st = ex.stats()
+    ex.shutdown()
+    assert st["dispatched"] == 5 and st["completed"] == 5
+    assert st["run_time_s"] >= 5 * 0.01 * 0.5
+    # later messages queued behind earlier ones -> nonzero wait time
+    assert st["wait_time_s"] > 0
+    assert st["max_queue_depth"] >= 2
+
+
+def test_wait_timeout_fires_on_busy_queue():
+    """A handler's wait(timeout) must raise even while the device queue keeps
+    serving other work — a busy loop cannot starve the deadline."""
+    ex = _executor()
+    never = threading.Event()  # a future that never resolves
+    flood_stop = threading.Event()
+
+    def keep_busy():
+        if not flood_stop.is_set():
+            ex.submit(2, keep_busy)  # queue never drains
+        time.sleep(0.005)
+
+    def outer():
+        from repro.core.messages import PFuture
+        dangling = PFuture()
+        t0 = time.monotonic()
+        try:
+            dangling.wait(timeout=0.3)
+        except TimeoutError:
+            return time.monotonic() - t0
+        return None
+
+    ex.submit(2, keep_busy)
+    elapsed = ex.submit(0, outer).wait(timeout=10)
+    flood_stop.set()
+    ex.shutdown(drain=False, timeout=2)
+    assert elapsed is not None, "wait(timeout) never raised on a busy queue"
+    assert elapsed < 5.0
+
+
+def test_errors_propagate_and_loop_survives():
+    """A raising handler rejects its future but must not kill the worker."""
+    ex = _executor()
+
+    def boom():
+        raise ValueError("boom")
+
+    f1 = ex.submit(0, boom)
+    with pytest.raises(ValueError, match="boom"):
+        f1.wait(timeout=5)
+    assert ex.submit(0, lambda: 42).wait(timeout=5) == 42
+    ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# NEL integration: no thread growth through the full particle runtime
+# ---------------------------------------------------------------------------
+
+def _tiny_module():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (3, 2)) * 0.5}
+
+    def loss(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2), {}
+
+    def fwd(p, batch):
+        return batch[0] @ p["w"]
+
+    return ParticleModule(init, loss, fwd)
+
+
+def _tiny_data():
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 3))
+    return [(x, x @ jnp.ones((3, 2)))]
+
+
+def test_nel_dispatch_uses_persistent_loops():
+    with PushDistribution(_tiny_module(), num_devices=1) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        batch = _tiny_data()[0]
+        pd.p_wait([pd.particles[p].step(batch) for p in pids])  # warm up jit
+        before = threading.active_count()
+        for _ in range(20):
+            pd.p_wait([pd.particles[p].step(batch) for p in pids])
+        assert threading.active_count() <= before
+        st = pd.nel.executor.stats()
+        assert st["dispatched"] >= 84
+        assert st["threads"] == pd.nel.executor.num_threads
+
+
+# ---------------------------------------------------------------------------
+# backend seam: nel vs compiled must match numerically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,kw", [
+    (DeepEnsemble, dict(optimizer=sgd(0.05), num_particles=3)),
+    (MultiSWAG, dict(optimizer=sgd(0.05), num_particles=3, max_rank=4)),
+    (SteinVGD, dict(num_particles=3, lr=0.05, lengthscale=1.0)),
+])
+def test_backend_compiled_matches_nel(algo, kw):
+    data = _tiny_data()
+    preds, params = {}, {}
+    for backend in ("nel", "compiled"):
+        with algo(_tiny_module(), num_devices=1, seed=0, backend=backend) as a:
+            pids, _ = a.bayes_infer(data, 3, **kw)
+            preds[backend] = a.posterior_pred(data[0])
+            params[backend] = [a.push_dist.p_params(p)["w"] for p in pids]
+    assert float(jnp.abs(preds["nel"] - preds["compiled"]).max()) < 1e-4
+    for pn, pc in zip(params["nel"], params["compiled"]):
+        assert float(jnp.abs(pn - pc).max()) < 1e-4
+
+
+def test_backend_compiled_multiswag_collects_matching_moments():
+    data = _tiny_data()
+    ranks, means = {}, {}
+    for backend in ("nel", "compiled"):
+        with MultiSWAG(_tiny_module(), num_devices=1, seed=0,
+                       backend=backend) as ms:
+            pids, _ = ms.bayes_infer(data, 3, optimizer=sgd(0.05),
+                                     num_particles=2, max_rank=4)
+            sts = [ms.push_dist.particles[p].state["swag"] for p in pids]
+            ranks[backend] = [int(s["rank"]) for s in sts]
+            means[backend] = [s["mean"]["w"] for s in sts]
+    assert ranks["nel"] == ranks["compiled"] == [3, 3]
+    for mn, mc in zip(means["nel"], means["compiled"]):
+        assert float(jnp.abs(mn - mc).max()) < 1e-4
+
+
+def test_backend_compiled_falls_back_without_fused_form():
+    """An Infer subclass without _fused_infer runs the NEL path under
+    backend="compiled" (transparent fallback)."""
+    from repro.bdl.infer import Infer
+
+    class NelOnly(Infer):
+        def _nel_infer(self, dataloader, epochs, **kw):
+            return "nel-path"
+
+    with NelOnly(_tiny_module(), backend="compiled") as alg:
+        assert alg.bayes_infer(None, 1) == "nel-path"
+
+
+def test_invalid_backend_rejected():
+    with pytest.raises(ValueError):
+        PushDistribution(_tiny_module(), backend="nonsense")
