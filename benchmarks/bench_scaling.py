@@ -10,8 +10,15 @@ fused stacked-axis backend (DESIGN.md §3) — one XLA program over all
 particles — so the runtime's dispatch overhead can be read directly off
 the nel-vs-compiled gap at fixed particle count.
 
+``--backend compiled-sharded`` further places the stacked state on a mesh
+over every local device (ParticleStore placement, DESIGN.md §6) — the
+paper's particle-scaling curves (Fig. 4: fixed model, growing particles
+across devices). Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to emulate N
+devices on CPU (structural validation; wall clock on one core is not).
+
 Rows: scaling/<workload>/<algo>/<impl>/p<particles>,us_per_epoch,devices=<n>
-where <impl> in {push, compiled, baseline}.
+where <impl> in {push, compiled, compiled-sharded, baseline}.
 """
 from __future__ import annotations
 
@@ -21,7 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.bdl import DeepEnsemble, MultiSWAG, SteinVGD, baselines
+from repro.core import Placement
 from repro.data.loader import DataLoader
+from repro.launch.mesh import make_bench_mesh
 from repro.optim import adam, sgd
 
 from .util import emit, timeit, tiny_module
@@ -99,6 +108,42 @@ def _run_compiled(num_devices, arch, mod, data, n):
          f"devices={num_devices}")
 
 
+def _run_compiled_sharded(arch, mod, data, n):
+    """Paper Fig. 4 reproduced through the sharded compiled path: the
+    particle axis of the store's stacked state sharded over a mesh across
+    every local device, the whole epoch as donated-buffer fused steps."""
+    ndev = len(jax.devices())
+    placement = Placement(mesh=make_bench_mesh(ndev))
+    opt = adam(1e-3)
+
+    with DeepEnsemble(mod, num_devices=1, backend="compiled",
+                      placement=placement) as de:
+        pids = [de.push_dist.p_create(opt) for _ in range(n)]
+        de._fused_epochs(pids, data[:1], 1, optimizer=opt)  # build+jit
+        us = timeit(lambda: (de._fused_epochs(pids, data, 1, optimizer=opt),
+                             jnp.zeros(()))[1])
+    emit(f"scaling/{arch}/ensemble/compiled-sharded/p{n}", us,
+         f"devices={ndev}")
+
+    with MultiSWAG(mod, num_devices=1, backend="compiled",
+                   placement=placement) as ms:
+        pids = ms._create(opt, n, max_rank=4)
+        ms._fused_epochs(pids, data[:1], 1, optimizer=opt)  # build+jit
+        us = timeit(lambda: (ms._fused_epochs(pids, data, 1, optimizer=opt),
+                             jnp.zeros(()))[1])
+    emit(f"scaling/{arch}/multiswag/compiled-sharded/p{n}", us,
+         f"devices={ndev}")
+
+    with SteinVGD(mod, num_devices=1, backend="compiled",
+                  placement=placement) as sv:
+        pids = sv._create(n)
+        sv._fused_epochs(pids, data[:1], 1, lr=1e-3)  # build+jit
+        us = timeit(lambda: (sv._fused_epochs(pids, data, 1, lr=1e-3),
+                             jnp.zeros(()))[1])
+    emit(f"scaling/{arch}/svgd/compiled-sharded/p{n}", us,
+         f"devices={ndev}")
+
+
 def _run_baselines(num_devices, arch, mod, data, n):
     opt_b = adam(1e-3)
     us = timeit(
@@ -122,8 +167,10 @@ def run(num_devices: int = 1, particles=(1, 2, 4), num_batches: int = 3,
         data = _data(mod.cfg, num_batches)
         for n in particles:
             _run_push(num_devices, arch, mod, data, n)
-            if backend == "compiled":  # additionally: the nel-vs-compiled gap
+            if backend in ("compiled", "compiled-sharded"):
                 _run_compiled(num_devices, arch, mod, data, n)
+            if backend == "compiled-sharded":  # the particle-scaling curve
+                _run_compiled_sharded(arch, mod, data, n)
             _run_baselines(num_devices, arch, mod, data, n)
 
 
@@ -132,7 +179,9 @@ def main():
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--particles", type=int, nargs="+", default=[1, 2, 4])
     ap.add_argument("--batches", type=int, default=3)
-    ap.add_argument("--backend", choices=("nel", "compiled"), default="nel")
+    ap.add_argument("--backend",
+                    choices=("nel", "compiled", "compiled-sharded"),
+                    default="nel")
     a = ap.parse_args()
     run(a.devices, tuple(a.particles), a.batches, backend=a.backend)
 

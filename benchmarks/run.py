@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV. Container-scale sizes (single CPU
 core); EXPERIMENTS.md maps each section to the paper artifact and explains
 which trends are wall-clock-faithful vs structurally validated.
 
+When the scaling section runs, its rows (particles x emulated-device
+throughput for every backend that ran) are also written to
+``BENCH_scaling.json`` so the perf trajectory is tracked across PRs; CI's
+sharded matrix job runs it under 4 forced host devices with
+``--scaling-backend compiled-sharded``.
+
   bench_scaling          Fig. 4 / Fig. 7  (particles x algorithms x devices)
   bench_depth_particles  Table 1          (depth vs particle tradeoff)
   bench_stress           Table 2 / C.3    (particle-cache oversubscription)
@@ -12,6 +18,8 @@ which trends are wall-clock-faithful vs structurally validated.
   bench_dispatch         (ours)           event-loop vs thread-per-dispatch
 """
 import argparse
+import functools
+import json
 import sys
 
 
@@ -19,11 +27,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. kernels,stress")
+    ap.add_argument("--scaling-backend", default="nel",
+                    choices=("nel", "compiled", "compiled-sharded"),
+                    help="backend column set for the scaling section")
+    ap.add_argument("--scaling-json", default="BENCH_scaling.json",
+                    help="where to persist the scaling rows")
     args = ap.parse_args()
     from . import (bench_accuracy, bench_depth_particles, bench_dispatch,
-                   bench_kernels, bench_scaling, bench_stress)
+                   bench_kernels, bench_scaling, bench_stress, util)
     table = {
-        "scaling": bench_scaling.run,
+        "scaling": functools.partial(bench_scaling.run,
+                                     backend=args.scaling_backend),
         "depth_particles": bench_depth_particles.run,
         "stress": bench_stress.run,
         "accuracy": bench_accuracy.run,
@@ -36,6 +50,15 @@ def main() -> None:
         if name in only:
             print(f"# --- {name} ---", flush=True)
             fn()
+    if "scaling" in only:
+        import jax
+        rows = [r for r in util.ROWS if r["name"].startswith("scaling/")]
+        with open(args.scaling_json, "w") as f:
+            json.dump({"devices": len(jax.devices()),
+                       "backend": args.scaling_backend,
+                       "rows": rows}, f, indent=1)
+        print(f"# wrote {len(rows)} scaling rows -> {args.scaling_json}",
+              flush=True)
 
 
 if __name__ == '__main__':

@@ -34,7 +34,14 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
+# Every emitted row is also collected here so run.py can persist sections
+# as JSON artifacts (BENCH_scaling.json) for perf-trajectory tracking.
+ROWS: list = []
+
+
 def emit(name: str, us: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 

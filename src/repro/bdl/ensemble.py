@@ -7,8 +7,11 @@ across devices. This is the best-scaling algorithm in the paper's Fig. 4.
 Under ``backend="compiled"`` the same algorithm lowers to one fused XLA
 program over the stacked particle axis (core/functional.py): identical
 per-particle inits (the PD's rng stream is shared by both paths), one
-vmapped value_and_grad + optimizer update per batch, results written
-back into the particles.
+vmapped value_and_grad + optimizer update per batch, state checked out of
+the ParticleStore once, donated to XLA every step (multi-epoch training
+never leaves the device), and committed back once at the end. With a
+mesh placement the particle axis is sharded across devices
+(``spmd_axis_name`` + explicit in/out shardings).
 """
 from __future__ import annotations
 
@@ -38,26 +41,26 @@ class DeepEnsemble(Infer):
 
     def _fused_epochs(self, pids, dataloader, epochs: int, *, optimizer):
         """Train existing particles for `epochs` through the fused program
-        (stack -> compiled loop -> write back). Reused by benchmarks so the
-        timed region is exactly the backend="compiled" epoch path."""
-        pd = self.push_dist
-        stacked = pd.p_stack(pids)
-        opt_state = pd.p_stack(pids, key="opt_state")
-        # cache the jitted step per optimizer so repeated calls don't retrace
-        if getattr(self, "_step_key", None) != id(optimizer):
-            self._step_key = id(optimizer)
-            self._step = compiled_ensemble_step(self.module, optimizer)
-        losses = []
-        for _ in range(epochs):
-            for batch in dataloader:
-                stacked, opt_state, ls = self._step(stacked, opt_state, batch)
-                losses = [float(l) for l in ls]
-        pd.p_unstack(pids, stacked)
-        pd.p_unstack(pids, opt_state, key="opt_state")
-        return losses
+        (store checkout -> donated compiled loop -> one commit). Reused by
+        benchmarks so the timed region is exactly the backend="compiled"
+        epoch path."""
+        placement = self.placement
+        self._reset_step_cache((id(optimizer), id(placement), len(pids)))
+        ls = None
+        with self._checked_out(pids, ("params", "opt_state")) as co:
+            for _ in range(epochs):
+                for batch in dataloader:
+                    if self._step is None:  # compile against the real batch
+                        self._step = functional.compile_ensemble_step(
+                            self.module.loss, optimizer, placement,
+                            co["params"], co["opt_state"], batch)
+                    co["params"], co["opt_state"], ls = self._step(
+                        co["params"], co["opt_state"], batch)
+        return [] if ls is None else [float(l) for l in ls]
 
 
 def compiled_ensemble_step(module, optimizer):
-    """Fused path: all particles in one XLA program."""
+    """Fused path: all particles in one XLA program (single-device form;
+    mesh-aware compilation lives in functional.compile_ensemble_step)."""
     step = functional.ensemble_step(module.loss, optimizer)
     return jax.jit(step)

@@ -8,33 +8,77 @@ procedure) and may implement ``_fused_infer`` (the compiled stacked-axis
 form from core/functional.py). Under ``backend="compiled"`` the fused form
 is selected transparently when present; algorithms without one fall back
 to the NEL path, so every algorithm runs under either backend.
+
+Placement (DESIGN.md §6): ``placement`` is the mesh/placement plan the
+fused forms compile against — particle axis sharded over the mesh's
+``data`` axis, within-particle sharding from ``sharding/rules``. The
+default (no mesh) is the single-device fast path; ``placement="auto"``
+builds a mesh over all local devices. The NEL path ignores the mesh (its
+devices come from ``num_devices``), but both paths share the PD's
+ParticleStore, so state written by one is visible to the other.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from contextlib import contextmanager
+from typing import Callable, Optional, Union
 
 import jax
 
-from ..core import ParticleModule, PushDistribution
+from ..core import ParticleModule, Placement, PushDistribution
 
 
 class Infer:
     def __init__(self, module: ParticleModule, *, num_devices: int = 1,
                  cache_size: int = 4, view_size: int = 4, seed: int = 0,
-                 backend: str = "nel"):
+                 backend: str = "nel",
+                 placement: Optional[Union[Placement, str]] = None):
         self.module = module
         self.num_devices = num_devices
+        if placement == "auto":
+            placement = Placement.auto()
         self.push_dist = PushDistribution(module, num_devices=num_devices,
                                           cache_size=cache_size,
                                           view_size=view_size, seed=seed,
-                                          backend=backend)
+                                          backend=backend,
+                                          placement=placement)
 
     @property
     def backend(self) -> str:
         return self.push_dist.backend
 
+    @property
+    def placement(self) -> Placement:
+        return self.push_dist.placement
+
+    @property
+    def store(self):
+        return self.push_dist.store
+
     def _has_fused(self) -> bool:
         return type(self)._fused_infer is not Infer._fused_infer
+
+    @contextmanager
+    def _checked_out(self, pids, keys):
+        """Checkout/commit protocol shared by every fused epoch loop: yield
+        a dict of stacked state (the loop rebinds its entries as it trains
+        on donated buffers); whatever was successfully checked out is
+        committed back exactly once, even on mid-loop failure."""
+        store = self.push_dist.store
+        co = {}
+        try:
+            for k in keys:
+                co[k] = store.checkout(k, pids)
+            yield co
+        finally:
+            for k, v in co.items():
+                store.commit(k, v, pids)
+
+    def _reset_step_cache(self, key):
+        """Invalidate the cached fused step when `key` changed; the actual
+        compile happens lazily against the first real batch (so compiling
+        never consumes a dataloader iteration)."""
+        if getattr(self, "_step_key", None) != key:
+            self._step_key, self._step = key, None
 
     def bayes_infer(self, dataloader, epochs: int, **kw):
         if self.backend == "compiled" and self._has_fused():

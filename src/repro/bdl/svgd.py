@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from ..core import functional
+from ..core.store import Placement
 from .infer import Infer
 
 
@@ -63,7 +64,9 @@ def svgd_force(theta, grads, lengthscale: float, use_kernel: bool = False):
     phi_i = (1/n) sum_j [ k_ji g_j - k_ji (theta_i - theta_j) / ell^2 ]
     """
     if use_kernel:
-        from ..kernels import svgd_rbf as _k
+        # ops.svgd_force gates Pallas interpret mode on the platform
+        # (compiled on TPU, interpreted elsewhere)
+        from ..kernels import ops as _k
         return _k.svgd_force(theta, grads, lengthscale)
     n = theta.shape[0]
     ell = rbf_lengthscale(theta, lengthscale)
@@ -76,22 +79,67 @@ def svgd_force(theta, grads, lengthscale: float, use_kernel: bool = False):
 
 
 def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
-                    use_kernel: bool = False):
-    """One compiled SVGD step over stacked particles."""
+                    use_kernel: bool = False, placement=None,
+                    num_particles: Optional[int] = None):
+    """One compiled SVGD step over stacked particles.
+
+    With a mesh placement the per-particle backward pass is distributed
+    over the particle axis (``spmd_axis_name``); the cross-particle kernel
+    matrix is expressed as an on-device all-gather over that axis: the
+    flattened (n, D) matrix is constrained particle-sharded for the local
+    math, then constrained gathered (replicated rows, D over `model`) to
+    feed the RBF kernel + force, then re-constrained particle-sharded —
+    GSPMD lowers those transitions to all-gathers, never to host copies."""
+    placement = placement or Placement()
+    spmd = (placement.spmd_axis(num_particles)
+            if num_particles is not None else None)
     vag = jax.vmap(jax.value_and_grad(lambda p, b: loss_fn(p, b)[0]),
-                   in_axes=(0, None))
+                   in_axes=(0, None), spmd_axis_name=spmd)
 
     def step(stacked_params, batch):
         losses, grads = vag(stacked_params, batch)
         theta, unravel = functional.flatten_stacked(stacked_params)
         g, _ = functional.flatten_stacked(grads)
-        phi = svgd_force(theta.astype(jnp.float32), g.astype(jnp.float32),
-                         lengthscale, use_kernel=use_kernel)
+        theta32 = theta.astype(jnp.float32)
+        g32 = g.astype(jnp.float32)
+        if placement.mesh is not None:
+            n, d = theta32.shape
+            wide = placement.matrix(n, d)
+            gathered = placement.gathered_matrix(d)
+            theta32 = jax.lax.with_sharding_constraint(theta32, wide)
+            g32 = jax.lax.with_sharding_constraint(g32, wide)
+            # the all-to-all the paper identifies as SVGD's bottleneck
+            # (§5.1), as one on-device collective over the particle axis:
+            theta_all = jax.lax.with_sharding_constraint(theta32, gathered)
+            g_all = jax.lax.with_sharding_constraint(g32, gathered)
+            phi = svgd_force(theta_all, g_all, lengthscale,
+                             use_kernel=use_kernel)
+            phi = jax.lax.with_sharding_constraint(phi, wide)
+        else:
+            phi = svgd_force(theta32, g32, lengthscale, use_kernel=use_kernel)
         new_theta = theta - lr * phi.astype(theta.dtype)
         new_params = jax.vmap(unravel)(new_theta)
         return new_params, losses
 
     return step
+
+
+def compile_svgd_step(loss_fn, placement, stacked, batch, *, lr: float,
+                      lengthscale: float = 1.0, use_kernel: bool = False):
+    """Jit the fused SVGD step against a placement plan: stacked params
+    sharded over the particle axis and donated across the epoch loop."""
+    placement = placement or Placement()
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    step = fused_svgd_step(loss_fn, lr=lr, lengthscale=lengthscale,
+                           use_kernel=use_kernel, placement=placement,
+                           num_particles=n)
+    if placement.mesh is None:
+        return jax.jit(step, donate_argnums=(0,))
+    p_sh = placement.shardings(stacked)
+    return jax.jit(step,
+                   in_shardings=(p_sh, placement.replicated(batch)),
+                   out_shardings=(p_sh, placement.vector(n)),
+                   donate_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------
@@ -181,16 +229,15 @@ class SteinVGD(Infer):
 
     def _fused_epochs(self, pids, dataloader, epochs: int, *,
                       lr: float = 1e-3, lengthscale: float = 1.0):
-        pd = self.push_dist
-        stacked = pd.p_stack(pids)
-        if getattr(self, "_step_key", None) != (lr, lengthscale):
-            self._step_key = (lr, lengthscale)
-            self._step = jax.jit(fused_svgd_step(self.module.loss, lr=lr,
-                                                 lengthscale=lengthscale))
-        losses = []
-        for _ in range(epochs):
-            for batch in dataloader:
-                stacked, ls = self._step(stacked, batch)
-                losses = [float(l) for l in ls]
-        pd.p_unstack(pids, stacked)
-        return losses
+        placement = self.placement
+        self._reset_step_cache((lr, lengthscale, id(placement), len(pids)))
+        ls = None
+        with self._checked_out(pids, ("params",)) as co:
+            for _ in range(epochs):
+                for batch in dataloader:
+                    if self._step is None:  # compile against the real batch
+                        self._step = compile_svgd_step(
+                            self.module.loss, placement, co["params"],
+                            batch, lr=lr, lengthscale=lengthscale)
+                    co["params"], ls = self._step(co["params"], batch)
+        return [] if ls is None else [float(l) for l in ls]

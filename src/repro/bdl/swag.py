@@ -13,7 +13,9 @@ sample:  theta = mean + sigma_diag^(1/2) z1 / sqrt(2)
 multi-SWAG = an ensemble of SWAG particles: each particle carries its own
 moments in particle.state (particle-local computation only -> scales like
 deep ensembles in the paper's Fig. 4). The moment update runs through
-repro.kernels.swag_moments (Pallas) when enabled, else the jnp oracle.
+repro.kernels.swag_moments (Pallas) when ``use_kernel=True``; interpret
+mode is gated on the backend platform (compiled on TPU, interpreted
+elsewhere) and the flag threads through ``swag_collect``.
 """
 from __future__ import annotations
 
@@ -41,12 +43,18 @@ def swag_state_init(params, max_rank: int = 20):
     }
 
 
-def swag_collect(state, params, use_kernel: bool = True):
-    """One moment-collection step (after an SGD epoch in the paper's setup)."""
+def swag_collect(state, params, use_kernel: bool = True,
+                 interpret: Optional[bool] = None):
+    """One moment-collection step (after an SGD epoch in the paper's setup).
+
+    ``interpret`` threads to the Pallas kernel: None (default) resolves to
+    interpret-off-TPU-only (kernels/swag_moments), True/False force it."""
     n = state["n"]
     if use_kernel:
         from ..kernels import swag_moments as _k
-        upd = _k.update_moments
+
+        def upd(mean, sq, p, n_):
+            return _k.update_moments(mean, sq, p, n_, interpret=interpret)
     else:
         upd = _update_moments_ref
     mean, sq = upd(state["mean"], state["sq_mean"], params, n)
@@ -143,30 +151,32 @@ class MultiSWAG(Infer):
     def _fused_epochs(self, pids, dataloader, epochs: int, *, optimizer,
                       pretrain_epochs: int = 0):
         """Stacked-axis multi-SWAG on existing particles: vmapped train step
-        + vmapped moment collection (swag_collect is jittable by
-        construction); results written back per particle."""
+        + vmapped moment collection, all state (params, opt, SWAG moments)
+        checked out of the store once, donated across the epoch loop, and
+        committed back once at the end."""
         from ..core import functional
-        pd = self.push_dist
-        stacked = pd.p_stack(pids)
-        opt_state = pd.p_stack(pids, key="opt_state")
-        swag_state = pd.p_stack(pids, key="swag")
-        if getattr(self, "_step_key", None) != id(optimizer):
-            self._step_key = id(optimizer)
-            self._step = jax.jit(
-                functional.ensemble_step(self.module.loss, optimizer))
-            self._collect = jax.jit(jax.vmap(
-                lambda s, p: swag_collect(s, p, use_kernel=False)))
-        losses = []
-        for e in range(epochs):
-            for batch in dataloader:
-                stacked, opt_state, ls = self._step(stacked, opt_state, batch)
-                losses = [float(l) for l in ls]
-            if e >= pretrain_epochs:
-                swag_state = self._collect(swag_state, stacked)
-        pd.p_unstack(pids, stacked)
-        pd.p_unstack(pids, opt_state, key="opt_state")
-        pd.p_unstack(pids, swag_state, key="swag")
-        return losses
+        placement = self.placement
+        key = (id(optimizer), id(placement), len(pids))
+        if getattr(self, "_step_key", None) != key:
+            self._collect = None
+        self._reset_step_cache(key)
+        ls = None
+        with self._checked_out(pids, ("params", "opt_state", "swag")) as co:
+            for e in range(epochs):
+                for batch in dataloader:
+                    if self._step is None:  # compile against the real batch
+                        self._step = functional.compile_ensemble_step(
+                            self.module.loss, optimizer, placement,
+                            co["params"], co["opt_state"], batch)
+                    co["params"], co["opt_state"], ls = self._step(
+                        co["params"], co["opt_state"], batch)
+                if e >= pretrain_epochs:
+                    if self._collect is None:
+                        self._collect = functional.compile_map_step(
+                            lambda s, p: swag_collect(s, p, use_kernel=False),
+                            placement, co["swag"], co["params"])
+                    co["swag"] = self._collect(co["swag"], co["params"])
+        return [] if ls is None else [float(l) for l in ls]
 
     def sample_predict(self, batch, *, samples_per_particle: int = 5,
                        rng=None, scale: float = 1.0):

@@ -4,10 +4,12 @@
 # particle.py  — Particle (local state + messaging), ParticleModule
 # pd.py        — PushDistribution (P(nn_Theta) as a set of particles)
 # messages.py  — PFuture / ParticleView (async-await + read-only views)
+# store.py     — ParticleStore: mesh-sharded stacked state, lazy views
 # functional.py— compiled stacked-particle fast path (the "compiled" backend)
 from .executor import Executor
 from .messages import PFuture, ParticleView, resolved, snapshot
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
 from .pd import BACKENDS, PushDistribution
+from .store import ParticleStore, Placement, StoreState
 from . import functional

@@ -7,17 +7,26 @@ particle-local computation is vmapped, and every particle-to-particle
 communication pattern becomes an array op (all-to-all gather = the stacked
 matrix itself; on a sharded mesh, XLA's all-gather over the particle axis).
 
-This removes the paper's per-message host round-trips and context switches
-by construction and is what the multi-pod dry-run lowers. EXPERIMENTS.md
-§Perf quantifies NEL vs compiled on identical SVGD workloads.
+Mesh-aware compilation (`compile_*`): given a `store.Placement` the fused
+steps are jitted with explicit ``in_shardings``/``out_shardings`` derived
+from ``sharding/rules`` (particle axis leading, within-particle rules on
+the trailing dims), ``donate_argnums`` on the stacked state so multi-epoch
+training never leaves the device (XLA reuses the buffers in place), and
+``vmap(..., spmd_axis_name=particle_axis)`` so GSPMD distributes particles
+across the mesh. With ``Placement(mesh=None)`` the same builders degrade
+to plain single-device jit — one code path, placement decided by
+shardings. EXPERIMENTS.md §Perf quantifies NEL vs compiled on identical
+SVGD workloads.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
+
+from .store import Placement
 
 
 def init_stacked(module, n: int, rng):
@@ -41,35 +50,97 @@ def flatten_stacked(stacked):
     return flat, unravel
 
 
-def ensemble_value_and_grad(loss_fn: Callable):
+def ensemble_value_and_grad(loss_fn: Callable,
+                            spmd_axis_name: Optional[str] = None):
     """vmap over particles; each particle sees the same batch (deep-ensemble
     semantics, paper §3.1) unless the batch itself has a particle axis."""
     vag = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
 
     def f(stacked_params, batch):
-        return jax.vmap(vag, in_axes=(0, None))(stacked_params, batch)
+        return jax.vmap(vag, in_axes=(0, None),
+                        spmd_axis_name=spmd_axis_name)(stacked_params, batch)
 
     return f
 
 
-def ensemble_step(loss_fn: Callable, optimizer):
+def ensemble_step(loss_fn: Callable, optimizer,
+                  spmd_axis_name: Optional[str] = None):
     """One compiled train step for all particles: grads + optimizer update."""
-    vag = ensemble_value_and_grad(loss_fn)
+    vag = ensemble_value_and_grad(loss_fn, spmd_axis_name)
 
     def step(stacked_params, stacked_opt_state, batch):
         losses, grads = vag(stacked_params, batch)
-        new_p, new_s = jax.vmap(optimizer.update)(stacked_params, grads,
-                                                  stacked_opt_state)
+        new_p, new_s = jax.vmap(optimizer.update,
+                                spmd_axis_name=spmd_axis_name)(
+            stacked_params, grads, stacked_opt_state)
         return new_p, new_s, losses
 
     return step
 
 
-def ensemble_predict(forward: Callable):
+def ensemble_predict(forward: Callable,
+                     spmd_axis_name: Optional[str] = None):
     """hat f(x) = (1/n) sum_i nn_{theta_i}(x) — one fused program."""
 
     def f(stacked_params, batch):
-        outs = jax.vmap(forward, in_axes=(0, None))(stacked_params, batch)
+        outs = jax.vmap(forward, in_axes=(0, None),
+                        spmd_axis_name=spmd_axis_name)(stacked_params, batch)
         return jax.tree.map(lambda o: jnp.mean(o, axis=0), outs)
 
     return f
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware compilation: placement -> jitted step with explicit shardings
+# ---------------------------------------------------------------------------
+
+def _n_particles(stacked) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+def compile_ensemble_step(loss_fn: Callable, optimizer,
+                          placement: Optional[Placement],
+                          stacked, opt_state, batch):
+    """Jit one ensemble train step against a placement plan.
+
+    State shardings come from the placement (particle axis + rules); the
+    batch is replicated (every particle sees the same data). The stacked
+    params/opt buffers are donated: across a multi-epoch loop the state
+    never leaves the device — write-back happens once, at commit time."""
+    placement = placement or Placement()
+    n = _n_particles(stacked)
+    step = ensemble_step(loss_fn, optimizer, placement.spmd_axis(n))
+    if placement.mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1))
+    p_sh = placement.shardings(stacked)
+    o_sh = placement.shardings(opt_state)
+    return jax.jit(step,
+                   in_shardings=(p_sh, o_sh, placement.replicated(batch)),
+                   out_shardings=(p_sh, o_sh, placement.vector(n)),
+                   donate_argnums=(0, 1))
+
+
+def compile_ensemble_predict(forward: Callable,
+                             placement: Optional[Placement], stacked, batch):
+    """Jit the fused posterior-predictive program against a placement."""
+    placement = placement or Placement()
+    n = _n_particles(stacked)
+    f = ensemble_predict(forward, placement.spmd_axis(n))
+    if placement.mesh is None:
+        return jax.jit(f)
+    return jax.jit(f, in_shardings=(placement.shardings(stacked),
+                                    placement.replicated(batch)))
+
+
+def compile_map_step(fn: Callable, placement: Optional[Placement],
+                     *stacked_args):
+    """Jit a per-particle map (e.g. SWAG moment collection) over stacked
+    state trees, sharded and donated like the train step."""
+    placement = placement or Placement()
+    n = _n_particles(stacked_args[0])
+    vm = jax.vmap(fn, spmd_axis_name=placement.spmd_axis(n))
+    if placement.mesh is None:
+        return jax.jit(vm, donate_argnums=(0,))
+    shs = tuple(placement.shardings(a) for a in stacked_args)
+    return jax.jit(vm, in_shardings=shs, out_shardings=shs[0],
+                   donate_argnums=(0,))

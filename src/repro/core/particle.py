@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .messages import ParticleView, PFuture, snapshot
+from .store import ParticleStore, StoreState
 
 
 class ParticleModule:
@@ -43,12 +44,22 @@ class ParticleModule:
 
 class Particle:
     def __init__(self, pid: int, nel, module: ParticleModule, params,
-                 optimizer=None, opt_state=None, state: Optional[dict] = None):
+                 optimizer=None, opt_state=None, state: Optional[dict] = None,
+                 store: Optional[ParticleStore] = None):
         self.pid = pid
         self.nel = nel
         self.module = module
         self.optimizer = optimizer
-        self.state: Dict[str, Any] = dict(state or {})
+        # All per-particle state lives in the (possibly shared) ParticleStore;
+        # ``state`` is this particle's mapping view of it (store.py). A
+        # standalone particle gets a private store so the API is unchanged.
+        if store is None:
+            store = ParticleStore()
+            store.register(pid)
+        self.store = store
+        self.state: StoreState = StoreState(store, pid)
+        for k, v in (state or {}).items():
+            self.state[k] = v
         self.state["params"] = params
         self.state["opt_state"] = opt_state
         self.state["grads"] = None

@@ -2,7 +2,8 @@
 
 A PD wraps an input NN (a ParticleModule) and encapsulates a set of
 particles created from it (the particle pushforward of Appendix A:
-p_create creates a particle via ppush). The PD owns the NEL.
+p_create creates a particle via ppush). The PD owns the NEL and the
+ParticleStore.
 
 API mirrors the paper's Fig. 2:
 
@@ -16,13 +17,20 @@ Runtime backends (DESIGN.md §3):
     runtime (persistent per-device event loops, executor.py).
   * ``backend="compiled"`` — Infer algorithms with a fused stacked-axis
     form (ensemble/SWAG/SVGD) run through core/functional.py instead:
-    one XLA program over all particles. Particles still exist — fused
-    params/opt/SWAG state are written back via ``p_unstack`` — so views,
+    one XLA program over all particles, placed on the PD's mesh
+    (``placement``). Particles still exist — their ``state`` is a lazy
+    per-particle view of the store's stacked pytrees — so views,
     messaging and ``p_predict`` behave identically. (One deliberate gap:
     ``gradients()`` stays None after a fused run — intermediate grads
     live inside the XLA program and are not materialized per step the
     way the NEL path's ``grad()`` dispatches are.) Algorithms without a
     fused form transparently fall back to the NEL path.
+
+State model (DESIGN.md §6): ``self.store`` (core/store.py) is the single
+source of truth for all per-particle state under either backend. The NEL
+backend reads/writes through per-particle views (``particle.state``);
+the compiled backend checks out the stacked form, trains with donated
+buffers, and commits once per fused run.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ from . import functional
 from .messages import PFuture
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
+from .store import ParticleStore, Placement
 
 BACKENDS = ("nel", "compiled")
 
@@ -42,7 +51,8 @@ class PushDistribution:
     def __init__(self, module: ParticleModule, *, num_devices: Optional[int] = None,
                  cache_size: int = 4, view_size: int = 4, seed: int = 0,
                  offload: bool = False, backend: str = "nel",
-                 max_pending: int = 4096):
+                 max_pending: int = 4096,
+                 placement: Optional[Placement] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.module = module
@@ -52,6 +62,12 @@ class PushDistribution:
         self.view_size = view_size
         self._rng = jax.random.PRNGKey(seed)
         self.particles: Dict[int, Particle] = {}
+        self.store = ParticleStore(placement)
+        self._predict_step = None
+
+    @property
+    def placement(self) -> Placement:
+        return self.store.placement
 
     # ------------------------------------------------------------------
     def _next_rng(self):
@@ -66,12 +82,14 @@ class PushDistribution:
             params = self.module.init(self._next_rng())
         opt_state = optimizer.init(params) if optimizer is not None else None
         pid = self.nel.register(None, device=device)
+        self.store.register(pid)
         p = Particle(pid, self.nel, self.module, params, optimizer, opt_state,
-                     state=state)
+                     state=state, store=self.store)
         for msg, fn in (receive or {}).items():
             p.on(msg, fn)
         self.nel._particles[pid] = p
         self.particles[pid] = p
+        self._predict_step = None  # particle count changed: recompile predict
         return pid
 
     def p_launch(self, pid: int, msg: str, *args, **kwargs) -> PFuture:
@@ -92,21 +110,31 @@ class PushDistribution:
 
     # -- compiled-backend bridge (stacked particle axis) --------------------
     def p_stack(self, pids: Sequence[int], key: str = "params"):
-        """Stack a per-particle state entry on a leading particle axis."""
-        return functional.stack_pytrees(
-            [self.particles[pid].state[key] for pid in pids])
+        """Canonical stacked form of a per-particle state entry (leading
+        particle axis, placed on the PD's mesh). Delegates to the store."""
+        return self.store.stacked(key, pids)
 
     def p_unstack(self, pids: Sequence[int], stacked, key: str = "params"):
-        """Write a fused result back into per-particle state (index i -> pid_i),
-        so views/messaging/prediction see exactly what the NEL path would."""
-        trees = functional.unstack_pytree(stacked, len(pids))
-        for pid, tree in zip(pids, trees):
-            self.particles[pid].state[key] = tree
+        """Commit a fused result as the canonical state (index i -> pid_i);
+        per-particle views re-derive lazily, so views/messaging/prediction
+        see exactly what the NEL path would."""
+        self.store.commit(key, stacked, pids)
 
     # -- ensemble-style prediction over all particles -----------------------
     def p_predict(self, batch):
-        """hat f(x) = (1/n) sum_i nn_{theta_i}(x) (paper §3.4)."""
-        futs = [self.particles[pid].forward(batch) for pid in self.particle_ids()]
+        """hat f(x) = (1/n) sum_i nn_{theta_i}(x) (paper §3.4).
+
+        Under ``backend="compiled"`` this is one fused XLA program over the
+        store's stacked params (functional.ensemble_predict) instead of n
+        sequential NEL forwards with a host wait each."""
+        pids = self.particle_ids()
+        if self.backend == "compiled" and pids:
+            stacked = self.store.stacked("params")
+            if self._predict_step is None:
+                self._predict_step = functional.compile_ensemble_predict(
+                    self.module.forward, self.placement, stacked, batch)
+            return self._predict_step(stacked, batch)
+        futs = [self.particles[pid].forward(batch) for pid in pids]
         outs = [f.wait() for f in futs]
         return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)
 

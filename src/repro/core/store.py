@@ -1,0 +1,389 @@
+"""ParticleStore: mesh-sharded particle state as the single source of truth.
+
+Both runtime backends read and write the same state through this store
+(Tran et al. 2018's design point: one program representation, placement
+decided by shardings):
+
+  * canonical form — one *stacked* pytree per state key ("params",
+    "opt_state", "swag", ...) with a leading particle axis, placed on a
+    device mesh via ``NamedSharding`` derived from
+    ``sharding/rules.tree_shardings(..., particle_axis=...)``;
+  * derived form — lazy per-particle *views* (unstack-on-read: a view is
+    just ``leaf[i]``, staying on device until consumed) with dirty-tracked
+    write-back, which is what the NEL backend's ``Particle.state`` maps
+    onto.
+
+Consistency protocol (all transitions under one lock):
+
+  write_view(pid)  -> row cached + marked dirty; the stale stacked row is
+                      shadowed (view reads hit the row cache first)
+  stacked()        -> flush: dirty rows written into the stacked tree
+                      (row-wise ``.at[i].set``), or a full restack when no
+                      canonical stacked exists / the particle set grew
+  checkout()       -> flush + *move* ownership to the caller: the fused
+                      epoch loop donates these buffers to XLA every step
+                      (``donate_argnums``), so the store must not retain a
+                      reference to memory that is about to be invalidated
+  commit(stacked)  -> the fused result becomes canonical; view caches are
+                      invalidated and re-derived lazily on next read
+
+``stats`` counts every materialization (stacks, unstacks, row flushes,
+commits, device placements) so tests can assert that a multi-epoch fused
+run touches the host exactly zero times per epoch: one checkout before the
+loop, one commit after, nothing in between.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..sharding import rules
+
+
+# ---------------------------------------------------------------------------
+# placement plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Placement:
+    """Where particle state lives: a mesh + which mesh axis carries the
+    particle dimension. ``mesh=None`` (the default) keeps state wherever
+    jax puts it — the single-device fast path with no resharding cost."""
+    mesh: Any = None
+    particle_axis: Optional[str] = "data"
+    mode: str = "tp"  # within-particle sharding rules mode (sharding/rules)
+
+    @staticmethod
+    def auto(particle_axis: str = "data", mode: str = "tp") -> "Placement":
+        """Mesh over all local devices, model axis 1 (particle-parallel)."""
+        from ..launch.mesh import make_bench_mesh
+        n = len(jax.devices())
+        if n <= 1:
+            return Placement(mesh=None)
+        return Placement(mesh=make_bench_mesh(n), particle_axis=particle_axis,
+                         mode=mode)
+
+    # -- sharding derivation -------------------------------------------------
+    def shardings(self, stacked_tree):
+        """NamedSharding tree for a stacked state pytree (leading particle
+        axis -> particle_axis, trailing dims -> sharding/rules)."""
+        if self.mesh is None:
+            return None
+        return rules.tree_shardings(self.mesh, stacked_tree, self.mode,
+                                    self.particle_axis)
+
+    def replicated(self, tree):
+        """Fully-replicated shardings (batches: every particle sees the
+        same data under deep-ensemble semantics)."""
+        if self.mesh is None:
+            return None
+        sh = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda _: sh, tree)
+
+    def _axis_fits(self, n: int, axis: Optional[str]) -> Optional[str]:
+        if self.mesh is None or axis is None:
+            return None
+        return axis if n % self.mesh.shape[axis] == 0 else None
+
+    def vector(self, n: int):
+        """Sharding for per-particle scalars stacked to (n,) (losses)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh,
+                             P(self._axis_fits(n, self.particle_axis)))
+
+    def matrix(self, n: int, d: int):
+        """Sharding for the flattened (n, D) particle-parameter matrix
+        (SVGD): particles over the particle axis, D over `model`."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh,
+                             P(self._axis_fits(n, self.particle_axis),
+                               self._axis_fits(d, "model")))
+
+    def gathered_matrix(self, d: int):
+        """Sharding of the (n, D) matrix *after* the all-gather over the
+        particle axis: every device holds all particles' rows (the SVGD
+        kernel matrix needs all-to-all), D still sharded over `model`."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(None, self._axis_fits(d, "model")))
+
+    def spmd_axis(self, n: int) -> Optional[str]:
+        """vmap spmd_axis_name when the particle count divides the mesh
+        axis — this is what lets GSPMD distribute particles."""
+        return self._axis_fits(n, self.particle_axis)
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+def _stack_rows(rows):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
+def _leading_dim(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+class ParticleStore:
+    """Canonical holder of all per-particle state of one PushDistribution."""
+
+    def __init__(self, placement: Optional[Placement] = None):
+        self.placement = placement or Placement()
+        self.pids: List[int] = []
+        self._index: Dict[int, int] = {}
+        self._stacked: Dict[str, Any] = {}        # key -> stacked pytree
+        self._rows: Dict[str, Dict[int, Any]] = {}  # key -> {idx: row tree}
+        self._dirty: Dict[str, Set[int]] = {}     # key -> idx newer than stacked
+        self._lock = threading.RLock()
+        self.stats = {"stacks": 0, "unstacks": 0, "row_flushes": 0,
+                      "commits": 0, "device_puts": 0, "checkouts": 0}
+
+    # -- registry ------------------------------------------------------------
+    def register(self, pid: int) -> int:
+        with self._lock:
+            if pid in self._index:
+                raise ValueError(f"pid {pid} already registered")
+            self._index[pid] = len(self.pids)
+            self.pids.append(pid)
+            return self._index[pid]
+
+    def __len__(self) -> int:
+        return len(self.pids)
+
+    def _subset(self, pids: Optional[Sequence[int]]) -> Optional[List[int]]:
+        """None/full set -> None (canonical path); otherwise the explicit
+        subset (any order), validated against the registry."""
+        if pids is None:
+            return None
+        pids = list(pids)
+        if pids == self.pids:
+            return None
+        missing = [p for p in pids if p not in self._index]
+        if missing:
+            raise KeyError(f"unregistered pids {missing}")
+        return pids
+
+    def _demote_to_rows(self, key: str):
+        """Replace the stacked form with per-particle rows (lock held).
+        Needed before subset checkout/commit: a stale stacked tree must
+        not shadow rows that are about to diverge from it."""
+        st = self._stacked.get(key)
+        if st is None:
+            return
+        rows = self._rows.setdefault(key, {})
+        for i in range(_leading_dim(st)):
+            if i not in rows:
+                rows[i] = jax.tree.map(lambda x, i=i: x[i], st)
+                self.stats["unstacks"] += 1
+        self._stacked.pop(key, None)
+        self._dirty.pop(key, None)
+
+    # -- per-particle views (unstack-on-read, dirty-tracked write-back) ------
+    def has(self, key: str, pid: int) -> bool:
+        with self._lock:
+            idx = self._index[pid]
+            if idx in self._rows.get(key, ()):
+                return True
+            st = self._stacked.get(key)
+            return st is not None and idx < _leading_dim(st)
+
+    def read(self, key: str, pid: int):
+        """Lazy view of one particle's entry: cached row if present, else
+        sliced out of the canonical stacked tree (stays on device)."""
+        with self._lock:
+            idx = self._index[pid]
+            rows = self._rows.setdefault(key, {})
+            if idx in rows:
+                return rows[idx]
+            st = self._stacked.get(key)
+            if st is None or idx >= _leading_dim(st):
+                raise KeyError(f"store has no {key!r} for particle {pid}")
+            row = jax.tree.map(lambda x: x[idx], st)
+            rows[idx] = row
+            self.stats["unstacks"] += 1
+            return row
+
+    def write(self, key: str, pid: int, tree):
+        """Write-back from a view: the row shadows the stacked entry until
+        the next flush."""
+        with self._lock:
+            idx = self._index[pid]
+            self._rows.setdefault(key, {})[idx] = tree
+            self._dirty.setdefault(key, set()).add(idx)
+
+    def discard(self, key: str, pid: int):
+        with self._lock:
+            if key in self._stacked:   # stacked would no longer cover this pid
+                raise ValueError(
+                    f"cannot delete {key!r} of particle {pid}: the key is "
+                    "stacked; delete is only supported for row-only keys")
+            idx = self._index[pid]
+            rows = self._rows.get(key, {})
+            if idx not in rows:
+                raise KeyError(key)
+            del rows[idx]
+            self._dirty.get(key, set()).discard(idx)
+
+    def keys_for(self, pid: int) -> List[str]:
+        with self._lock:
+            return [k for k in set(self._rows) | set(self._stacked)
+                    if self.has(k, pid)]
+
+    # -- canonical stacked form ---------------------------------------------
+    def _flush(self, key: str):
+        """Make the stacked tree canonical for `key` (lock held)."""
+        st = self._stacked.get(key)
+        dirty = self._dirty.get(key, set())
+        n = len(self.pids)
+        if st is not None and _leading_dim(st) == n and not dirty:
+            return st
+        # row-wise write-back only pays off while few rows are dirty: each
+        # .at[i].set copies the whole stacked tree, so beyond ~half the
+        # rows a single restack moves strictly less data
+        if (st is not None and _leading_dim(st) == n
+                and len(dirty) <= max(1, n // 2)):
+            for idx in sorted(dirty):
+                row = self._rows[key][idx]
+                st = jax.tree.map(lambda s, r: s.at[idx].set(r), st, row)
+            self.stats["row_flushes"] += len(dirty)
+        else:
+            # no canonical stacked (or the particle set grew): full restack
+            rows = [self.read(key, pid) for pid in self.pids]
+            st = _stack_rows(rows)
+            self.stats["stacks"] += 1
+        st = self._place(st)
+        self._stacked[key] = st
+        self._dirty[key] = set()
+        return st
+
+    def _place(self, st):
+        pl = self.placement
+        if pl.mesh is None:
+            return st
+        want = pl.shardings(st)
+        leaves = jax.tree.leaves(st)
+        want_leaves = jax.tree.leaves(want)
+        if all(getattr(x, "sharding", None) == s
+               for x, s in zip(leaves, want_leaves)):
+            return st                          # already placed (commit path)
+        self.stats["device_puts"] += 1
+        return jax.device_put(st, want)
+
+    def stacked(self, key: str, pids: Optional[Sequence[int]] = None):
+        """The canonical stacked pytree (flushing any dirty views first).
+        With an explicit pid subset, a fresh stack of those rows (index
+        i -> pids[i]) that does not disturb the canonical form."""
+        with self._lock:
+            sub = self._subset(pids)
+            if sub is None:
+                return self._flush(key)
+            st = _stack_rows([self.read(key, p) for p in sub])
+            self.stats["stacks"] += 1
+            return st
+
+    def checkout(self, key: str, pids: Optional[Sequence[int]] = None):
+        """Like ``stacked`` but transfers buffer ownership to the caller:
+        the store drops its references so the fused loop may donate them
+        to XLA. The caller must ``commit`` a result (or the original) back."""
+        with self._lock:
+            sub = self._subset(pids)
+            self.stats["checkouts"] += 1
+            if sub is None:
+                st = self._flush(key)
+                self._stacked.pop(key, None)
+                self._rows.pop(key, None)
+                self._dirty.pop(key, None)
+                return st
+            # subset checkout: remaining particles keep their rows
+            for p in sub:          # materialize before popping anything
+                self.read(key, p)
+            self._demote_to_rows(key)
+            rows = self._rows.setdefault(key, {})
+            out = [rows.pop(self._index[p]) for p in sub]
+            dirty = self._dirty.get(key, set())
+            for p in sub:
+                dirty.discard(self._index[p])
+            self.stats["stacks"] += 1
+            return _stack_rows(out)
+
+    def commit(self, key: str, stacked, pids: Optional[Sequence[int]] = None):
+        """A fused program's output becomes canonical; views re-derive
+        lazily (this is the *only* write-back of a multi-epoch fused run).
+        With a pid subset, row i of `stacked` becomes pids[i]'s state."""
+        with self._lock:
+            sub = self._subset(pids)
+            n = len(self.pids) if sub is None else len(sub)
+            if _leading_dim(stacked) != n:
+                raise ValueError(
+                    f"stacked {key!r} has leading dim "
+                    f"{_leading_dim(stacked)}, expected {n}")
+            self.stats["commits"] += 1
+            if sub is None:
+                self._stacked[key] = stacked
+                self._rows.pop(key, None)
+                self._dirty.pop(key, None)
+                return
+            self._demote_to_rows(key)
+            rows = self._rows.setdefault(key, {})
+            for j, p in enumerate(sub):
+                rows[self._index[p]] = jax.tree.map(
+                    lambda x, j=j: x[j], stacked)
+            self.stats["unstacks"] += len(sub)
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self.stats)
+
+
+# ---------------------------------------------------------------------------
+# per-particle mapping facade (what Particle.state is)
+# ---------------------------------------------------------------------------
+
+class StoreState:
+    """Mutable-mapping view of one particle's slice of a ParticleStore.
+
+    ``particle.state["params"]`` reads/writes route through the store's
+    view protocol, so the NEL backend and the fused backend observe one
+    source of truth — there is no duplicated per-particle state dict."""
+
+    def __init__(self, store: ParticleStore, pid: int):
+        self.store = store
+        self.pid = pid
+
+    def __getitem__(self, key: str):
+        return self.store.read(key, self.pid)
+
+    def __setitem__(self, key: str, value):
+        self.store.write(key, self.pid, value)
+
+    def __delitem__(self, key: str):
+        self.store.discard(key, self.pid)
+
+    def __contains__(self, key: str) -> bool:
+        return self.store.has(key, self.pid)
+
+    def get(self, key: str, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def keys(self):
+        return self.store.keys_for(self.pid)
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    def __repr__(self) -> str:
+        return f"StoreState(pid={self.pid}, keys={sorted(self.keys())})"

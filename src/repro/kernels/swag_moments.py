@@ -9,11 +9,21 @@ update_moments() is the pytree-level entry point used by repro.bdl.swag.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK = 8 * 1024
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Interpret mode is a platform property, not a call-site choice:
+    compiled on TPU, interpreted everywhere else (None = auto)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _moments_kernel(n_ref, mean_ref, sq_ref, p_ref, out_mean_ref, out_sq_ref):
@@ -24,8 +34,10 @@ def _moments_kernel(n_ref, mean_ref, sq_ref, p_ref, out_mean_ref, out_sq_ref):
     out_sq_ref[...] = (sq_ref[...] * n + p * p) * inv
 
 
-def moments_flat(mean, sq_mean, params, n, *, interpret: bool = True):
+def moments_flat(mean, sq_mean, params, n, *,
+                 interpret: Optional[bool] = None):
     """mean/sq_mean/params: (D,) f32. Returns (mean', sq')."""
+    interpret = _resolve_interpret(interpret)
     D = mean.shape[0]
     nb = -(-D // BLOCK)
     pad = nb * BLOCK - D
@@ -53,12 +65,13 @@ def moments_flat(mean, sq_mean, params, n, *, interpret: bool = True):
     return out_mean.reshape(-1)[:D], out_sq.reshape(-1)[:D]
 
 
-def update_moments(mean, sq_mean, params, n):
+def update_moments(mean, sq_mean, params, n, *,
+                   interpret: Optional[bool] = None):
     """Pytree-level fused moment update (ravel -> kernel -> unravel)."""
     from jax.flatten_util import ravel_pytree
     m_flat, unravel = ravel_pytree(mean)
     s_flat, _ = ravel_pytree(sq_mean)
     p_flat, _ = ravel_pytree(params)
     nm, ns = moments_flat(m_flat.astype(jnp.float32), s_flat.astype(jnp.float32),
-                          p_flat.astype(jnp.float32), n)
+                          p_flat.astype(jnp.float32), n, interpret=interpret)
     return unravel(nm), unravel(ns)
