@@ -1,0 +1,120 @@
+"""Serving throughput + latency: micro-batched vs one-request-at-a-time.
+
+The serving acceptance bar (ISSUE-3): coalescing concurrent requests
+into fused BMA calls must deliver >= 3x the throughput of flushing every
+request as its own fused call at 8 particles. Both sides run the full
+service stack (engine + batcher + executor worker), differing only in
+``max_batch`` — so the ratio isolates exactly what micro-batching buys.
+
+Rows:
+  serve/unbatched/p{P}     us_per_request, req_per_s   (max_batch=1)
+  serve/batched/p{P}       us_per_request, req_per_s   (max_batch=32)
+  serve/speedup/p{P}       ratio, x_over_unbatched
+  serve/engine/p{P}_b{B}   us_per_fused_call across request batch sizes
+  serve/latency/p{P}       p50 us, p95/p99 derived     (batched path)
+
+``python -m benchmarks.run --only serve`` persists the rows to
+BENCH_serve.json; ``python -m benchmarks.bench_serve --require 3.0``
+enforces the speedup bar (CI).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import PushDistribution
+from repro.data.synthetic import mnist_like
+from repro.serve import serve
+
+from .util import emit, timeit, tiny_module
+
+PARTICLES = (2, 8)
+REQUESTS = 32
+ENGINE_BATCHES = (1, 8, 32)
+
+
+def _requests(n):
+    rng = np.random.default_rng(0)
+    batch = mnist_like(rng, n)
+    return [{"images": batch["images"][i]} for i in range(n)]
+
+
+def _drive(svc, reqs) -> float:
+    """Submit every request async, wait for all; returns seconds."""
+    t0 = time.perf_counter()
+    futs = [svc.predict_async(r) for r in reqs]
+    for f in futs:
+        f.result(120.0)
+    return time.perf_counter() - t0
+
+
+def _throughput(pd, reqs, *, max_batch: int, max_wait_ms: float):
+    with serve(pd, kind="classify", max_batch=max_batch,
+               max_wait_ms=max_wait_ms, max_queue=4 * REQUESTS) as svc:
+        # compile every bucket this run can hit before timing (blocking:
+        # lazy warmup results must not queue under the timed region)
+        batch = {"images": np.stack([r["images"] for r in reqs])}
+        b = 1
+        while b <= max_batch:
+            jax.block_until_ready(
+                svc.predict_batch({"images": batch["images"][:b]}))
+            b <<= 1
+        _drive(svc, reqs[:4])                 # warm the batcher path
+        dt = _drive(svc, reqs)
+        return dt, svc.stats()
+
+
+def run(require: float | None = None):
+    module = tiny_module()
+    reqs = _requests(REQUESTS)
+    for P in PARTICLES:
+        with PushDistribution(module, num_devices=1, seed=0) as pd:
+            for _ in range(P):
+                pd.p_create()
+
+            dt_un, _ = _throughput(pd, reqs, max_batch=1, max_wait_ms=0.0)
+            dt_b, stats = _throughput(pd, reqs, max_batch=REQUESTS,
+                                      max_wait_ms=2.0)
+            us_un = dt_un / REQUESTS * 1e6
+            us_b = dt_b / REQUESTS * 1e6
+            emit(f"serve/unbatched/p{P}", us_un,
+                 f"req_per_s={REQUESTS / dt_un:.1f}")
+            emit(f"serve/batched/p{P}", us_b,
+                 f"req_per_s={REQUESTS / dt_b:.1f}")
+            speedup = us_un / us_b
+            emit(f"serve/speedup/p{P}", speedup, "x_over_unbatched")
+            # the service's own percentile accounting (service.stats)
+            emit(f"serve/latency/p{P}", stats["latency_p50_ms"] * 1e3,
+                 f"p95_us={stats['latency_p95_ms'] * 1e3:.0f};"
+                 f"p99_us={stats['latency_p99_ms'] * 1e3:.0f}")
+
+            # raw fused-call cost across request batch sizes (no batcher)
+            with serve(pd, kind="classify") as svc:
+                for B in ENGINE_BATCHES:
+                    batch = {"images": np.stack(
+                        [r["images"] for r in reqs[:B]])}
+                    us = timeit(lambda b=batch: svc.predict_batch(b))
+                    emit(f"serve/engine/p{P}_b{B}", us,
+                         f"us_per_req={us / B:.1f}")
+
+            if require is not None and P == 8 and speedup < require:
+                raise SystemExit(
+                    f"serve speedup {speedup:.2f}x < required "
+                    f"{require:.1f}x at {P} particles")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--require", type=float, default=None,
+                    help="fail unless batched/unbatched >= this at 8 "
+                         "particles (acceptance: 3.0)")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(require=a.require)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,12 +10,18 @@ throughput for every backend that ran) are also written to
 sharded matrix job runs it under 4 forced host devices with
 ``--scaling-backend compiled-sharded``.
 
+Serve rows land in ``BENCH_serve.json`` the same way (micro-batched vs
+one-request-at-a-time throughput, fused-call latency across batch sizes
+and particle counts); CI enforces the >= 3x micro-batching bar via
+``bench_serve --require``.
+
   bench_scaling          Fig. 4 / Fig. 7  (particles x algorithms x devices)
   bench_depth_particles  Table 1          (depth vs particle tradeoff)
   bench_stress           Table 2 / C.3    (particle-cache oversubscription)
   bench_accuracy         Tables 3-4       (multi-SWAG vs standard accuracy)
   bench_kernels          (ours)           Pallas kernels + SVGD impls
   bench_dispatch         (ours)           event-loop vs thread-per-dispatch
+  bench_serve            (ours)           posterior-predictive serving layer
 """
 import argparse
 import functools
@@ -32,9 +38,12 @@ def main() -> None:
                     help="backend column set for the scaling section")
     ap.add_argument("--scaling-json", default="BENCH_scaling.json",
                     help="where to persist the scaling rows")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="where to persist the serving rows")
     args = ap.parse_args()
     from . import (bench_accuracy, bench_depth_particles, bench_dispatch,
-                   bench_kernels, bench_scaling, bench_stress, util)
+                   bench_kernels, bench_scaling, bench_serve, bench_stress,
+                   util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
                                      backend=args.scaling_backend),
@@ -43,6 +52,7 @@ def main() -> None:
         "accuracy": bench_accuracy.run,
         "kernels": bench_kernels.run,
         "dispatch": bench_dispatch.run,
+        "serve": bench_serve.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
@@ -58,6 +68,14 @@ def main() -> None:
                        "backend": args.scaling_backend,
                        "rows": rows}, f, indent=1)
         print(f"# wrote {len(rows)} scaling rows -> {args.scaling_json}",
+              flush=True)
+    if "serve" in only:
+        import jax
+        rows = [r for r in util.ROWS if r["name"].startswith("serve/")]
+        with open(args.serve_json, "w") as f:
+            json.dump({"devices": len(jax.devices()), "rows": rows}, f,
+                      indent=1)
+        print(f"# wrote {len(rows)} serve rows -> {args.serve_json}",
               flush=True)
 
 

@@ -1,15 +1,21 @@
-"""End-to-end serving driver: batched requests through prefill + decode with
-a posterior-predictive serve ensemble (the decode-shape workload of the
-dry run, at container scale).
+"""Batched LM serving through `repro.serve`: a posterior-predictive
+decode loop where ALL particles run in one fused program per token.
 
-A qwen-family model serves a batch of prompts: prefill builds the KV
-caches, then an autoregressive decode loop samples new tokens; with
---particles > 1 the logits are averaged over a small serve ensemble
-(multi-SWAG-style BDL serving).
+A qwen-family serve ensemble (P particles standing in for SWAG draws)
+lives in a PushDistribution's ParticleStore; a stateful PredictiveEngine
+compiles one fused step — every particle's decode forward over the
+stacked axis, Bayesian-model-averaged logits, predictive entropy and
+mutual information — and the per-particle KV caches ride the stacked
+axis on device across the whole generation. Cache attention runs through
+the Pallas decode kernel (`decode_kernel=True`).
+
+Contrast with the pre-serve version of this example, which hand-rolled a
+Python loop over particles with a host sync per (particle, step) pair.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --steps 16 --batch 4
 """
 import argparse
+import functools
 import time
 
 import jax
@@ -17,8 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import ParticleModule, PushDistribution
 from repro.data.synthetic import lm_batch
 from repro.models import api
+from repro.serve import PredictiveEngine
 
 
 def main():
@@ -34,51 +42,70 @@ def main():
     cfg = configs.get("qwen1.5-0.5b").replace(
         n_units=a.layers, d_model=a.d_model, n_heads=8, n_kv_heads=8,
         head_dim=32, d_ff=a.d_model * 3, vocab_size=2048, max_seq_len=4096)
-    n_params = None
 
-    # serve ensemble: P particles (independent inits stand in for SWAG draws)
-    params = [api.init_params(jax.random.PRNGKey(i), cfg)
-              for i in range(a.particles)]
-    n_params = sum(x.size for x in jax.tree.leaves(params[0]))
-    print(f"model: {a.layers}L d={a.d_model} ({n_params/1e6:.1f}M params), "
-          f"serve ensemble P={a.particles}")
+    # the serve ensemble is a PushDistribution: particles in the store
+    module = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+    with PushDistribution(module, num_devices=1, seed=0) as pd:
+        for _ in range(a.particles):
+            pd.p_create()
+        n_params = sum(x.size for x in jax.tree.leaves(pd.p_params(0)))
+        print(f"model: {a.layers}L d={a.d_model} ({n_params/1e6:.1f}M params), "
+              f"serve ensemble P={a.particles}")
 
-    prompts = jnp.asarray(lm_batch(np.random.default_rng(0), a.batch,
-                                   a.prompt_len, cfg.vocab_size)["tokens"])
+        prompts = jnp.asarray(lm_batch(np.random.default_rng(0), a.batch,
+                                       a.prompt_len, cfg.vocab_size)["tokens"])
+        total_len = a.prompt_len + a.steps + 1
 
-    total_len = a.prompt_len + a.steps + 1
-    prefill = jax.jit(lambda p, b: api.prefill(p, b, cfg, max_len=total_len))
-    decode = jax.jit(lambda p, t, c, pos: api.decode_step(p, t, c, pos, cfg))
+        # stateful engine: fused BMA decode, per-particle KV caches stacked
+        decode = functools.partial(api.decode_step, cfg=cfg,
+                                   decode_kernel=True)
+        engine = PredictiveEngine(
+            lambda p, caches, b: decode(p, b[0], caches, b[1]),
+            store=pd.store, kind="classify", stateful=True)
 
-    # --- prefill ------------------------------------------------------------
-    t0 = time.perf_counter()
-    logits, caches = zip(*(prefill(p, {"tokens": prompts}) for p in params))
-    logits = jnp.mean(jnp.stack([l.astype(jnp.float32) for l in logits]), 0)
-    caches = list(caches)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {a.batch} x {a.prompt_len} tokens in {t_prefill:.2f}s "
-          f"({a.batch * a.prompt_len / t_prefill:.0f} tok/s)")
+        # --- prefill: one vmapped pass yields BOTH the stacked caches and
+        # the first BMA logits (prompt FLOPs paid once, one program) ------
+        t0 = time.perf_counter()
+        first, caches = jax.jit(jax.vmap(
+            lambda p: api.prefill(p, {"tokens": prompts}, cfg,
+                                  max_len=total_len)))(
+            engine.stacked_params())
+        logits = jnp.mean(first.astype(jnp.float32), 0)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        print(f"prefill: {a.batch} x {a.prompt_len} tokens in "
+              f"{t_prefill:.2f}s "
+              f"({a.batch * a.prompt_len / t_prefill:.0f} tok/s)")
 
-    # --- autoregressive decode with ensemble-averaged logits ----------------
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    generated = [tok]
-    t0 = time.perf_counter()
-    for step in range(a.steps):
-        pos = jnp.int32(a.prompt_len + step)
-        outs = []
-        for i in range(a.particles):
-            l, caches[i] = decode(params[i], tok, caches[i], pos)
-            outs.append(l.astype(jnp.float32))
-        tok = jnp.argmax(jnp.mean(jnp.stack(outs), 0), -1).astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    toks = a.steps * a.batch
-    print(f"decode: {a.steps} steps x {a.batch} requests in {t_decode:.2f}s "
-          f"({toks / t_decode:.1f} tok/s, {t_decode / a.steps * 1e3:.0f} ms/step)")
-    gen = jnp.stack(generated, 1)
-    print("generated token ids (request 0):", gen[0].tolist())
+        # --- fused-BMA decode with uncertainty riding along --------------
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        generated, entropies, mis = [tok], [], []
+        t0 = time.perf_counter()
+        for step in range(a.steps):
+            heads, caches = engine.step(
+                caches, (tok, jnp.int32(a.prompt_len + step)))
+            tok = jnp.argmax(heads["mean"], -1).astype(jnp.int32)
+            generated.append(tok)
+            entropies.append(heads["entropy"])
+            mis.append(heads["mutual_info"])
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+        toks = a.steps * a.batch
+        print(f"decode: {a.steps} steps x {a.batch} requests in "
+              f"{t_decode:.2f}s ({toks / t_decode:.1f} tok/s, "
+              f"{t_decode / a.steps * 1e3:.0f} ms/step)")
+        gen = jnp.stack(generated, 1)
+        ent = jnp.stack(entropies, 1)
+        mi = jnp.stack(mis, 1)
+        print("request 0 tokens   :", gen[0].tolist())
+        print("request 0 entropy  :",
+              [round(float(e), 2) for e in ent[0]])
+        print("request 0 mutualinf:",
+              [round(float(m), 3) for m in mi[0]])
+        print("engine:", engine.snapshot_stats())
 
 
 if __name__ == "__main__":

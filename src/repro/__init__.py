@@ -1,7 +1,8 @@
 """repro: Push (concurrent probabilistic programming for BDL) in JAX.
 
 Layers: core (particle abstraction) / bdl (inference algorithms) /
-models+configs (architecture zoo) / optim / data / checkpoint / kernels
-(Pallas TPU) / sharding+launch (multi-pod distribution).
+serve (batched posterior-predictive serving) / models+configs
+(architecture zoo) / optim / data / checkpoint / kernels (Pallas TPU) /
+sharding+launch (multi-pod distribution).
 """
 __version__ = "1.0.0"

@@ -94,6 +94,14 @@ class Infer:
     def posterior_pred(self, batch):
         return self.push_dist.p_predict(batch)
 
+    def posterior_predictive(self, **kw):
+        """Hand a trained posterior off to the serving layer: a
+        PredictiveService doing fused BMA over this Infer's particles
+        (repro.serve). Algorithms whose posterior is richer than its
+        particles override this — MultiSWAG samples its Gaussians at
+        serve time. Caller owns the service (use as a context manager)."""
+        return self.push_dist.serve(**kw)
+
     def p_parameters(self):
         return [self.push_dist.p_params(pid)
                 for pid in self.push_dist.particle_ids()]

@@ -74,8 +74,16 @@ def _update_moments_ref(mean, sq_mean, params, n):
     return new_mean, new_sq
 
 
-def swag_sample(state, rng, scale: float = 1.0):
-    """Draw one parameter sample from the SWAG Gaussian."""
+def swag_sample(state, rng, scale: float = 1.0, *, use_kernel: bool = False,
+                interpret: Optional[bool] = None):
+    """Draw one parameter sample from the SWAG Gaussian.
+
+    ``use_kernel=True`` computes the diagonal scale through the fused
+    Pallas pass (kernels/swag_moments.diag_std_flat); the interpret
+    decision is NOT made here — it reuses the moment kernel's platform
+    gating (compiled on TPU, interpreted elsewhere; ``interpret`` only
+    forces it). This is the serve-time path of
+    ``MultiSWAG.posterior_predictive``."""
     k1, k2 = jax.random.split(rng)
     leaves, tdef = jax.tree.flatten(state["mean"])
     z1_keys = jax.random.split(k1, len(leaves))
@@ -84,9 +92,20 @@ def swag_sample(state, rng, scale: float = 1.0):
     z2 = jax.random.normal(k2, (max_rank,))
     rank_mask = (jnp.arange(max_rank) < state["rank"]).astype(jnp.float32)
 
+    if use_kernel:
+        from ..kernels import swag_moments as _k
+
+        def diag_std(m, s):
+            return _k.diag_std_flat(
+                m.reshape(-1).astype(jnp.float32),
+                s.reshape(-1).astype(jnp.float32),
+                interpret=interpret).reshape(m.shape)
+    else:
+        def diag_std(m, s):
+            return jnp.sqrt(jnp.maximum(s - m * m, 1e-30))
+
     def one(m, s, d, zk):
-        var = jnp.maximum(s - m * m, 1e-30)
-        diag = jnp.sqrt(var) * jax.random.normal(zk, m.shape) / jnp.sqrt(2.0)
+        diag = diag_std(m, s) * jax.random.normal(zk, m.shape) / jnp.sqrt(2.0)
         zw = (z2 * rank_mask).astype(d.dtype)
         lowrank = jnp.tensordot(zw, d, axes=(0, 0)) / jnp.sqrt(2.0 * (K_eff - 1.0))
         return m + scale * (diag + lowrank).astype(m.dtype)
@@ -96,6 +115,21 @@ def swag_sample(state, rng, scale: float = 1.0):
     out = [one(m, s, d, zk) for m, s, d, zk in
            zip(leaves, sq_leaves, dev_leaves, z1_keys)]
     return tdef.unflatten(out)
+
+
+def swag_sample_stacked(stacked_state, rng, samples_per_particle: int,
+                        scale: float = 1.0, *, use_kernel: bool = False,
+                        interpret: Optional[bool] = None):
+    """Serve-time sampling over the store's stacked SWAG moments: draw S
+    samples from every particle's Gaussian in one vmapped program,
+    returning stacked params with leading axis n*S (sample j of particle
+    i at row i*S + j) — exactly the shape a PredictiveEngine serves."""
+    n = jax.tree.leaves(stacked_state)[0].shape[0]
+    S = samples_per_particle
+    rep = jax.tree.map(lambda x: jnp.repeat(x, S, axis=0), stacked_state)
+    keys = jax.random.split(rng, n * S)
+    return jax.vmap(lambda st, k: swag_sample(
+        st, k, scale, use_kernel=use_kernel, interpret=interpret))(rep, keys)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +211,25 @@ class MultiSWAG(Infer):
                             placement, co["swag"], co["params"])
                     co["swag"] = self._collect(co["swag"], co["params"])
         return [] if ls is None else [float(l) for l in ls]
+
+    def posterior_predictive(self, *, samples_per_particle: int = 0,
+                             rng=None, scale: float = 1.0,
+                             use_kernel: bool = True, **kw):
+        """Serve-time handoff: with ``samples_per_particle=S > 0`` the
+        service does BMA over n*S fresh draws from each particle's SWAG
+        Gaussian (sampled once, up front, into a static stacked tree —
+        the multi-SWAG predictive of Wilson & Izmailov 2020) instead of
+        the particle means. S=0 serves the live particle params like any
+        other Infer. The diagonal-scale read goes through the Pallas
+        moments kernel with its platform gating (``use_kernel=True``)."""
+        if samples_per_particle <= 0:
+            return super().posterior_predictive(**kw)
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        stacked_swag = self.store.stacked("swag")
+        sampled = swag_sample_stacked(stacked_swag, rng,
+                                      samples_per_particle, scale,
+                                      use_kernel=use_kernel)
+        return self.push_dist.serve(params=sampled, **kw)
 
     def sample_predict(self, batch, *, samples_per_particle: int = 5,
                        rng=None, scale: float = 1.0):

@@ -1,1 +1,2 @@
-from .ckpt import save, restore, latest_step
+from .ckpt import (latest_step, latest_store_step, restore, restore_store,
+                   save, save_store)

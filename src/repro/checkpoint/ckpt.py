@@ -4,6 +4,14 @@ save(dir, step, tree) writes <dir>/ckpt_<step>.npz with flattened leaves +
 a JSON treedef manifest; restore(dir, step=None) returns (step, tree).
 Atomic via tmp-file rename. Works for params, optimizer states and SWAG
 moments alike (anything jax.tree-flattenable with array leaves).
+
+Store-aware checkpointing (serving handoff): ``save_store`` writes a
+whole ParticleStore — every state key's canonical stacked pytree plus
+placement metadata (particle axis, mode, mesh shape) and the pid
+registry — into ONE npz; ``restore_store`` rebuilds a ready-to-serve
+store in one round trip, re-placing stacked state on a mesh without
+replaying inference. Tree structure is self-describing (typed key paths
+in the manifest), so no template pytree is needed on restore.
 """
 from __future__ import annotations
 
@@ -11,7 +19,7 @@ import json
 import os
 import re
 import tempfile
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -67,3 +75,145 @@ def restore(ckpt_dir: str, step: Optional[int] = None, like: Any = None
             raise KeyError(f"checkpoint missing leaf {key}")
         out.append(jax.numpy.asarray(by_path[key], dtype=leaf.dtype))
     return step, jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ---------------------------------------------------------------------------
+# store-aware checkpointing (one round trip for a whole ParticleStore)
+# ---------------------------------------------------------------------------
+
+def _skeleton(tree, leaves: List[Any]):
+    """Self-describing structure record: dict/tuple/list/None nodes plus
+    leaf indices into the flat array list (tuples restore as tuples —
+    unlike keypath-based reconstruction, empty containers survive)."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, dict):
+        if not all(isinstance(k, str) for k in tree):
+            raise TypeError("store checkpoint requires str dict keys")
+        return {"t": "dict", "k": {k: _skeleton(v, leaves)
+                                   for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "tuple" if isinstance(tree, tuple) else "list",
+                "c": [_skeleton(v, leaves) for v in tree]}
+    leaves.append(tree)
+    return {"t": "leaf", "i": len(leaves) - 1}
+
+
+def _rebuild(skel, arrays):
+    t = skel["t"]
+    if t == "none":
+        return None
+    if t == "dict":
+        return {k: _rebuild(v, arrays) for k, v in skel["k"].items()}
+    if t in ("tuple", "list"):
+        out = [_rebuild(v, arrays) for v in skel["c"]]
+        return tuple(out) if t == "tuple" else out
+    return arrays[skel["i"]]
+
+
+def save_store(ckpt_dir: str, step: int, store,
+               keys: Optional[List[str]] = None) -> str:
+    """Write a ParticleStore — every key's canonical stacked pytree, the
+    pid registry, and the placement plan — as <dir>/store_<step>.npz.
+
+    One round trip: each key is flushed to its stacked form once and the
+    placed leaves stream straight to the file. Keys that cannot stack
+    (e.g. ``grads`` of an un-stepped particle) are skipped when ``keys``
+    is not explicit."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    explicit = keys is not None
+    keys = list(keys) if explicit else store.keys()
+    arrays: Dict[str, np.ndarray] = {}
+    skels: Dict[str, Any] = {}
+    for ki, key in enumerate(keys):
+        try:
+            st = store.stacked(key)
+        except (KeyError, TypeError, ValueError):
+            if explicit:
+                raise
+            continue
+        flat: List[Any] = []
+        skels[key] = _skeleton(st, flat)
+        for i, leaf in enumerate(flat):
+            arrays[f"k{ki}_l{i}"] = np.asarray(leaf)
+        skels[key]["_slot"] = ki
+    pl = store.placement
+    manifest = {
+        "step": step,
+        "pids": list(store.pids),
+        "placement": {
+            "particle_axis": pl.particle_axis,
+            "mode": pl.mode,
+            "mesh_shape": (None if pl.mesh is None
+                           else [int(pl.mesh.shape[a])
+                                 for a in pl.mesh.axis_names]),
+            "mesh_axes": (None if pl.mesh is None
+                          else list(pl.mesh.axis_names)),
+        },
+        "keys": skels,
+    }
+    path = os.path.join(ckpt_dir, f"store_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, __store_manifest__=json.dumps(manifest), **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_store_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"store_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_store(ckpt_dir: str, step: Optional[int] = None,
+                  placement=None) -> Tuple[int, Any]:
+    """Rebuild a ready-to-serve ParticleStore from ``save_store`` output.
+
+    Returns (step, store): pids re-registered, every saved key committed
+    as the canonical stacked form, state re-placed on a mesh — so a
+    PredictiveEngine can serve it immediately, no inference replay.
+
+    ``placement``: an explicit Placement wins; None tries to revive the
+    saved plan (a mesh of the saved shape when the local device count
+    matches, else single-device)."""
+    from ..core.store import ParticleStore, Placement
+
+    if step is None:
+        step = latest_store_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no store checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"store_{step:08d}.npz")
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(str(data["__store_manifest__"]))
+    meta = manifest["placement"]
+    if placement is None:
+        mesh = None
+        if meta["mesh_shape"] is not None:
+            n_want = int(np.prod(meta["mesh_shape"]))
+            if n_want <= len(jax.devices()):
+                from ..launch.mesh import make_mesh
+                mesh = make_mesh(tuple(meta["mesh_shape"]),
+                                 tuple(meta["mesh_axes"]))
+        placement = Placement(mesh=mesh, particle_axis=meta["particle_axis"],
+                              mode=meta["mode"])
+    store = ParticleStore(placement)
+    for pid in manifest["pids"]:
+        store.register(pid)
+    for key, skel in manifest["keys"].items():
+        ki = skel["_slot"]
+        arrays = []
+        while f"k{ki}_l{len(arrays)}" in data:
+            arrays.append(data[f"k{ki}_l{len(arrays)}"])
+        tree = _rebuild(skel, arrays)
+        if tree is None:
+            continue
+        if placement.mesh is not None:
+            tree = jax.device_put(tree, placement.shardings(tree))
+        else:
+            tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        store.commit(key, tree)
+    return step, store

@@ -138,6 +138,13 @@ class PushDistribution:
         outs = [f.wait() for f in futs]
         return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)
 
+    def serve(self, **kw):
+        """Batched posterior-predictive service over this PD's store
+        (repro.serve): fused BMA forward + uncertainty heads + adaptive
+        micro-batching. Lazy import — core must not depend on serve."""
+        from ..serve import serve as _serve
+        return _serve(self, **kw)
+
     def drain(self, timeout: Optional[float] = None):
         self.nel.drain(timeout)
 

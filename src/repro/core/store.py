@@ -143,6 +143,11 @@ class ParticleStore:
         self._rows: Dict[str, Dict[int, Any]] = {}  # key -> {idx: row tree}
         self._dirty: Dict[str, Set[int]] = {}     # key -> idx newer than stacked
         self._lock = threading.RLock()
+        # (generation, per-key edit count): serving engines cache the
+        # flushed stacked tree against this and only re-read after a
+        # write/commit/registration (engine.py's param_refreshes stat)
+        self._gen = 0
+        self._versions: Dict[str, int] = {}
         self.stats = {"stacks": 0, "unstacks": 0, "row_flushes": 0,
                       "commits": 0, "device_puts": 0, "checkouts": 0}
 
@@ -153,7 +158,23 @@ class ParticleStore:
                 raise ValueError(f"pid {pid} already registered")
             self._index[pid] = len(self.pids)
             self.pids.append(pid)
+            self._gen += 1          # particle set changed: all keys stale
             return self._index[pid]
+
+    def version(self, key: str):
+        """Monotone token that changes whenever `key`'s canonical content
+        could have (write/commit/discard/registration). Serving engines
+        compare tokens instead of re-flushing per request."""
+        with self._lock:
+            return (self._gen, self._versions.get(key, 0))
+
+    def _bump(self, key: str):
+        self._versions[key] = self._versions.get(key, 0) + 1
+
+    def keys(self) -> List[str]:
+        """Every state key any particle holds (stacked or row form)."""
+        with self._lock:
+            return sorted(set(self._rows) | set(self._stacked))
 
     def __len__(self) -> int:
         return len(self.pids)
@@ -218,6 +239,7 @@ class ParticleStore:
             idx = self._index[pid]
             self._rows.setdefault(key, {})[idx] = tree
             self._dirty.setdefault(key, set()).add(idx)
+            self._bump(key)
 
     def discard(self, key: str, pid: int):
         with self._lock:
@@ -231,6 +253,7 @@ class ParticleStore:
                 raise KeyError(key)
             del rows[idx]
             self._dirty.get(key, set()).discard(idx)
+            self._bump(key)
 
     def keys_for(self, pid: int) -> List[str]:
         with self._lock:
@@ -296,6 +319,7 @@ class ParticleStore:
         with self._lock:
             sub = self._subset(pids)
             self.stats["checkouts"] += 1
+            self._bump(key)
             if sub is None:
                 st = self._flush(key)
                 self._stacked.pop(key, None)
@@ -326,6 +350,7 @@ class ParticleStore:
                     f"stacked {key!r} has leading dim "
                     f"{_leading_dim(stacked)}, expected {n}")
             self.stats["commits"] += 1
+            self._bump(key)
             if sub is None:
                 self._stacked[key] = stacked
                 self._rows.pop(key, None)

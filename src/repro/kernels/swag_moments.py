@@ -65,6 +65,36 @@ def moments_flat(mean, sq_mean, params, n, *,
     return out_mean.reshape(-1)[:D], out_sq.reshape(-1)[:D]
 
 
+def _diag_std_kernel(mean_ref, sq_ref, out_ref):
+    m = mean_ref[...]
+    out_ref[...] = jnp.sqrt(jnp.maximum(sq_ref[...] - m * m, 1e-30))
+
+
+def diag_std_flat(mean, sq_mean, *, interpret: Optional[bool] = None):
+    """sqrt(max(sq_mean - mean^2, eps)) fused over (D,) f32 — the SWAG
+    diagonal scale read at serve-time sampling (one HBM pass instead of
+    three elementwise HLOs). Same platform gating as the moment update:
+    ``interpret=None`` resolves via ``_resolve_interpret``."""
+    interpret = _resolve_interpret(interpret)
+    D = mean.shape[0]
+    nb = -(-D // BLOCK)
+    pad = nb * BLOCK - D
+    if pad:
+        mean = jnp.pad(mean, (0, pad))
+        sq_mean = jnp.pad(sq_mean, (0, pad), constant_values=1.0)
+    shp = (nb, BLOCK)
+    out = pl.pallas_call(
+        _diag_std_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(shp, jnp.float32),
+        interpret=interpret,
+    )(mean.reshape(shp), sq_mean.reshape(shp))
+    return out.reshape(-1)[:D]
+
+
 def update_moments(mean, sq_mean, params, n, *,
                    interpret: Optional[bool] = None):
     """Pytree-level fused moment update (ravel -> kernel -> unravel)."""

@@ -199,11 +199,16 @@ def prefill(params, batch, cfg, max_len=None):
     return logits[:, 0], caches
 
 
-def decode_step(params, token, caches, cur_pos, cfg):
-    """token: (B,) i32; cur_pos: scalar i32. Returns (logits (B,V), caches)."""
+def decode_step(params, token, caches, cur_pos, cfg, *,
+                decode_kernel: bool = False):
+    """token: (B,) i32; cur_pos: scalar i32. Returns (logits (B,V), caches).
+
+    ``decode_kernel=True`` runs cache attention through the Pallas decode
+    kernel (repro.serve's LM path sets this; platform-gated interpret)."""
     dtype = jnp.dtype(cfg.dtype)
     x = _embed(params, token[:, None], cfg, dtype)
-    ctx: Dict[str, Any] = {"cache_dtype": _cache_dtype(cfg), "cur_pos": cur_pos}
+    ctx: Dict[str, Any] = {"cache_dtype": _cache_dtype(cfg), "cur_pos": cur_pos,
+                           "decode_kernel": decode_kernel}
     if cfg.family == "audio":
         D = cfg.d_model
         dim = jnp.arange(D // 2, dtype=jnp.float32)

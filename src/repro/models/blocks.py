@@ -278,13 +278,24 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     return fa(q, k, v)[:, :Sq]
 
 
-def decode_attention(q, k_cache, v_cache, *, k_pos, cur_pos, softcap: float = 0.0):
+def decode_attention(q, k_cache, v_cache, *, k_pos, cur_pos, softcap: float = 0.0,
+                     use_kernel: bool = False):
     """Single-step attention over a KV cache.
 
     q: (B, 1, H, hd); k_cache, v_cache: (B, C, KVH, hd);
     k_pos: (B, C) absolute position of each cache slot (-1 = empty);
     cur_pos: scalar or (B,) current absolute position.
+
+    ``use_kernel=True`` routes through the Pallas VMEM-tiled decode
+    kernel (repro.kernels.ops.decode_attention, online softmax, one HBM
+    pass over the cache; interpret mode platform-gated there) — the LM
+    serve path's hot spot. Softcap models keep the jnp form (the kernel
+    has no softcap).
     """
+    if use_kernel and softcap == 0.0:
+        from ..kernels import ops as _kops
+        del cur_pos
+        return _kops.decode_attention(q, k_cache, v_cache, k_pos)
     B, _, H, hd = q.shape
     C, KVH = k_cache.shape[1], k_cache.shape[2]
     G = H // KVH
@@ -357,7 +368,8 @@ def attn_apply_fullseq(p, x, cfg, *, kind="causal", window=0, prefix_len=0,
     return out, (k, v)
 
 
-def attn_apply_decode(p, x, cfg, cache, *, cur_pos, window=0):
+def attn_apply_decode(p, x, cfg, cache, *, cur_pos, window=0,
+                      use_kernel=False):
     """One-token decode. cache: {k, v, pos}; ring-buffered when window>0.
 
     x: (B, 1, D). Returns (out, new_cache).
@@ -378,7 +390,7 @@ def attn_apply_decode(p, x, cfg, cache, *, cur_pos, window=0):
     k_pos = lax.dynamic_update_slice_in_dim(
         cache["pos"], jnp.full((B, 1), cur_pos, cache["pos"].dtype), slot, 1)
     out = decode_attention(q, k_cache, v_cache, k_pos=k_pos, cur_pos=cur_pos,
-                           softcap=cfg.logit_softcap)
+                           softcap=cfg.logit_softcap, use_kernel=use_kernel)
     out = dense_apply(p["wo"], out.reshape(B, 1, -1))
     return out, {"k": k_cache, "v": v_cache, "pos": k_pos}
 

@@ -146,7 +146,8 @@ def layer_apply_decode(kind: str, p, x, cfg, cache, ctx):
         return mamba_mod.mamba_block_decode(p, x, cfg, cache)
     if kind == "dec_attn_mlp":
         h, sc = attn_apply_decode(p["attn"], norm_apply(p["ln1"], x), cfg,
-                                  cache["self"], cur_pos=cur)
+                                  cache["self"], cur_pos=cur,
+                                  use_kernel=ctx.get("decode_kernel", False))
         x = x + h
         from .blocks import decode_attention, rope
         B = x.shape[0]
@@ -160,7 +161,8 @@ def layer_apply_decode(kind: str, p, x, cfg, cache, ctx):
         return x, {"self": sc, "xk": cache["xk"], "xv": cache["xv"]}
     mkind, window, _ = _mask_kind(kind, cfg, ctx)
     h, cache = attn_apply_decode(p["attn"], norm_apply(p["ln1"], x), cfg, cache,
-                                 cur_pos=cur, window=window)
+                                 cur_pos=cur, window=window,
+                                 use_kernel=ctx.get("decode_kernel", False))
     x = x + h
     if kind == "attn_moe":
         h, _ = moe_mod.moe_apply(p["moe"], norm_apply(p["ln2"], x), cfg)

@@ -1,0 +1,13 @@
+# Batched posterior-predictive serving over the sharded ParticleStore.
+# engine.py      — PredictiveEngine: fused BMA forward + uncertainty heads,
+#                  per-bucket compile cache, on-device particle reduction
+# batcher.py     — MicroBatcher: deadline/size-triggered request coalescing
+#                  on the PR-1 executor worker loop, bounded + backpressured
+# uncertainty.py — predictive heads (BMA mean, variance, entropy, BALD MI)
+# metrics.py     — NLL / ECE / Brier (+ NumPy references for tests)
+# service.py     — serve(pd).predict(x) front-end with latency percentiles
+from . import metrics, uncertainty
+from .batcher import MicroBatcher
+from .engine import PredictiveEngine, bucket_size, pad_rows
+from .service import (PendingPrediction, Prediction, PredictiveService,
+                      serve)

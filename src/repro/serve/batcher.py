@@ -1,0 +1,199 @@
+"""Adaptive micro-batcher: coalesce concurrent requests into fused calls.
+
+The serving analogue of the paper's dispatch problem: one fused BMA
+forward per *request* wastes the accelerator exactly the way
+thread-per-dispatch wasted the host (PR 1), so requests are coalesced
+into padded batches and flushed by whichever trigger fires first:
+
+  size      the pending set reached ``max_batch`` — flush immediately;
+  deadline  the oldest pending request has waited ``max_wait_ms`` —
+            flush whatever has accumulated (bounded tail latency);
+  close     the batcher is shutting down — flush the remainder.
+
+The flush loop is not a new thread model: it runs as work items on a
+``core.executor.Executor`` (the PR 1 persistent worker loop — one device
+queue, FIFO mailbox, no thread churn), scheduled only while requests are
+pending, so an idle batcher costs one parked worker. The queue is
+bounded: ``submit`` blocks once ``max_queue`` requests are pending
+(backpressure, mirroring the executor's ``max_pending`` admission).
+
+Each request is ONE example (no leading batch axis); the batcher stacks
+rows, pads to the engine's power-of-two bucket, calls ``predict_fn``
+once, and resolves each request's PFuture with its row of the result
+tree. Per-request latency (enqueue -> resolve) lands in a ring buffer
+for the service's p50/p95/p99.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core.executor import Executor
+from ..core.messages import PFuture
+from .engine import bucket_size, pad_rows
+
+_LAT_RING = 4096
+
+
+class _Request:
+    __slots__ = ("x", "future", "t_enqueue")
+
+    def __init__(self, x, future: PFuture):
+        self.x = x
+        self.future = future
+        self.t_enqueue = time.monotonic()
+
+
+def stack_requests(rows: List[Any]):
+    """Stack per-request example trees into one batch (leading axis m).
+
+    Stacks on the HOST (np.stack): one device transfer for the whole
+    batch when the fused program consumes it, instead of one dispatch
+    per request row (32 tiny jnp ops cost ~100ms on CPU; one np.stack
+    costs microseconds)."""
+    return jax.tree.map(lambda *xs: np.stack(xs), *rows)
+
+
+class MicroBatcher:
+    def __init__(self, predict_fn: Callable, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 512,
+                 executor: Optional[Executor] = None):
+        if max_batch < 1 or max_queue < 1:
+            raise ValueError("max_batch and max_queue must be >= 1")
+        self.predict_fn = predict_fn
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.max_queue = max_queue
+        self._owns_executor = executor is None
+        # one "device" worker is the flush loop; no pool threads needed
+        self._exec = executor or Executor(num_devices=1, pool_size=0,
+                                          max_pending=2 * max_queue)
+        self._pump_pid = id(self)  # any stable key works as a mailbox id
+        self._exec.add_particle(self._pump_pid, 0)
+        self._cond = threading.Condition()
+        self._pending: deque = deque()
+        self._pump_scheduled = False
+        self._closed = False
+        self._latencies: deque = deque(maxlen=_LAT_RING)
+        self.stats: Dict[str, Any] = {
+            "requests": 0, "batches": 0, "rows": 0, "padded_rows": 0,
+            "size_flushes": 0, "deadline_flushes": 0, "close_flushes": 0,
+            "max_queue_depth": 0, "errors": 0,
+        }
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, x) -> PFuture:
+        """Enqueue one example; resolves to its row of the prediction.
+        Blocks while ``max_queue`` requests are already pending."""
+        fut = PFuture()
+        req = _Request(x, fut)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            while len(self._pending) >= self.max_queue:
+                self._cond.wait(0.05)
+                if self._closed:
+                    raise RuntimeError("batcher is closed")
+            self._pending.append(req)
+            self.stats["requests"] += 1
+            depth = len(self._pending)
+            if depth > self.stats["max_queue_depth"]:
+                self.stats["max_queue_depth"] = depth
+            if not self._pump_scheduled:
+                self._pump_scheduled = True
+                self._exec.submit(self._pump_pid, self._pump)
+            self._cond.notify_all()
+        return fut
+
+    # -- flush loop (runs on the executor worker) ----------------------------
+    def _pump(self):
+        while True:
+            with self._cond:
+                if not self._pending:
+                    self._pump_scheduled = False
+                    return
+                deadline = self._pending[0].t_enqueue + self.max_wait
+                while (not self._closed
+                       and len(self._pending) < self.max_batch):
+                    rem = deadline - time.monotonic()
+                    if rem <= 0:
+                        break
+                    self._cond.wait(rem)
+                if len(self._pending) >= self.max_batch:
+                    reason = "size"
+                elif self._closed:
+                    reason = "close"
+                else:
+                    reason = "deadline"
+                reqs = [self._pending.popleft()
+                        for _ in range(min(len(self._pending),
+                                           self.max_batch))]
+                self._cond.notify_all()   # wake backpressured submitters
+            if not reqs:    # close() raced the deadline wait and drained
+                continue    # the queue itself; nothing to flush
+            self._flush(reqs, reason)
+
+    def _flush(self, reqs: List[_Request], reason: str):
+        self.stats[f"{reason}_flushes"] += 1
+        self.stats["batches"] += 1
+        self.stats["rows"] += len(reqs)
+        try:
+            batch = stack_requests([r.x for r in reqs])
+            padded = pad_rows(batch, bucket_size(len(reqs)))
+            self.stats["padded_rows"] += (bucket_size(len(reqs)) - len(reqs))
+            # one host transfer for the whole result tree; per-request
+            # rows are then free numpy slices (n lazy device slices
+            # would each pay a dispatch)
+            result = jax.device_get(self.predict_fn(padded))
+            now = time.monotonic()
+            for i, r in enumerate(reqs):
+                self._latencies.append(now - r.t_enqueue)
+                r.future._resolve(
+                    jax.tree.map(lambda a, i=i: a[i], result))
+        except BaseException as e:       # surfaced on each request's wait()
+            self.stats["errors"] += 1
+            for r in reqs:
+                r.future._reject(e)
+
+    # -- introspection -------------------------------------------------------
+    def queue_depth(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    def latencies_s(self) -> List[float]:
+        with self._cond:
+            return list(self._latencies)
+
+    def snapshot_stats(self) -> Dict[str, Any]:
+        with self._cond:
+            out = dict(self.stats)
+            out["queue_depth"] = len(self._pending)
+        n = max(1, out["rows"] + out["padded_rows"])
+        out["occupancy"] = out["rows"] / n
+        return out
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self, timeout: float = 30.0):
+        """Flush whatever is pending, then stop accepting requests."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self._owns_executor:
+            self._exec.shutdown(drain=True, timeout=timeout)
+        # reject anything the pump never got to (executor already down)
+        with self._cond:
+            leftovers = list(self._pending)
+            self._pending.clear()
+        for r in leftovers:
+            r.future._reject(RuntimeError("batcher closed"))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

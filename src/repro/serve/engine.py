@@ -1,0 +1,246 @@
+"""PredictiveEngine: one fused Bayesian-model-averaging forward per request.
+
+The serving counterpart of ``core/functional``'s training builders: the
+engine compiles a single XLA program that runs *all* particles over the
+store's stacked axis (``vmap(forward, spmd_axis_name=...)``), computes
+every uncertainty head (serve/uncertainty.py) inside that program, and
+reduces over the particle axis **on device** — on a mesh placement the
+member outputs are sharding-constrained particle-sharded for the local
+math, then constrained replicated, which GSPMD lowers to an all-gather
+over the particle axis (the same transition pattern as SVGD's kernel
+matrix, DESIGN.md §6) rather than a host round trip.
+
+Stacked params are read straight from the ParticleStore (``stacked()``
+returns the canonical placed tree; the store's version counter lets the
+engine cache the reference between commits), so serving never unshards,
+restacks, or re-places particle state — the sharded subprocess test
+asserts those stats stay flat across requests.
+
+Compile caching is bucketed per model size: request batches are padded up
+to the next power of two, so an engine serving mixed batch sizes holds
+one compiled program per (particle count, bucket, abstract batch shape)
+instead of one per distinct size.
+
+Two program shapes:
+
+  predict(batch)        stateless BMA forward     forward(params, batch)
+  step(state, batch)    stateful serving (LM decode: per-particle KV
+                        caches ride the stacked axis and never leave the
+                        device)                    forward(params, state,
+                                                   batch) -> (out, state)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.store import ParticleStore, Placement
+from . import uncertainty
+
+
+def bucket_size(m: int) -> int:
+    """Next power of two >= m (compile-cache bucketing)."""
+    if m < 1:
+        raise ValueError("batch must be non-empty")
+    b = 1
+    while b < m:
+        b <<= 1
+    return b
+
+
+def pad_rows(tree, target: int):
+    """Pad every leaf's leading axis to `target` by repeating the last
+    row (repeat, not zeros: padding must stay in-distribution for
+    normalization layers; padded rows are sliced off after the call)."""
+    m = jax.tree.leaves(tree)[0].shape[0]
+    if m == target:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (target - m,) + x.shape[1:])]),
+        tree)
+
+
+def _abstract(tree) -> Tuple:
+    """Hashable (structure, shapes, dtypes) key for the compile cache."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (str(treedef),
+            tuple((tuple(x.shape), jnp.result_type(x).name) for x in leaves))
+
+
+def _leading(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+class PredictiveEngine:
+    """Compiled posterior-predictive service core over a ParticleStore.
+
+    Parameters
+    ----------
+    forward:    stateless mode — ``forward(params_row, batch) -> outputs``
+                (leading batch axis); stateful mode (``stateful=True``) —
+                ``forward(params_row, state_row, batch) -> (out, state)``.
+    store/key:  where stacked params live (the PD's store). Mutually
+                exclusive with ``params`` — a static stacked tree (e.g.
+                serve-time SWAG samples, bdl/swag.py).
+    placement:  mesh plan; defaults to the store's. Decides the particle
+                axis sharding + the on-device BMA all-gather.
+    kind:       "classify" (member outputs are logits) or "regress".
+    """
+
+    def __init__(self, forward: Callable, *,
+                 store: Optional[ParticleStore] = None, key: str = "params",
+                 params: Any = None, placement: Optional[Placement] = None,
+                 kind: str = "classify", stateful: bool = False):
+        if (store is None) == (params is None):
+            raise ValueError("pass exactly one of store= or params=")
+        if kind not in uncertainty.KINDS:
+            raise ValueError(f"kind must be one of {uncertainty.KINDS}")
+        self.forward = forward
+        self.store = store
+        self.key = key
+        self.kind = kind
+        self.stateful = stateful
+        if placement is None:
+            placement = store.placement if store is not None else Placement()
+        self.placement = placement
+        self._static_params = params
+        if params is not None and placement.mesh is not None:
+            self._static_params = jax.device_put(
+                params, placement.shardings(params))
+        self._params_version: Any = None
+        self._params_cache: Any = None
+        self._programs: Dict[Tuple, Callable] = {}
+        self.stats = {"calls": 0, "compiles": 0, "bucket_hits": 0,
+                      "param_refreshes": 0}
+
+    # -- stacked params ------------------------------------------------------
+    def stacked_params(self):
+        """The canonical stacked params, cached between store commits
+        (store.version) so the hot path is one dict lookup — and never a
+        reshard: the store hands back the already-placed tree."""
+        if self._static_params is not None:
+            return self._static_params
+        v = self.store.version(self.key)
+        if v != self._params_version:
+            self._params_cache = self.store.stacked(self.key)
+            self._params_version = v
+            self.stats["param_refreshes"] += 1
+        return self._params_cache
+
+    @property
+    def num_particles(self) -> int:
+        return _leading(self.stacked_params())
+
+    # -- program construction ------------------------------------------------
+    def _bma_reduce_heads(self, outs, n: int):
+        """Heads from stacked member outputs, with the particle-axis
+        reduction expressed as sharding-constraint transitions."""
+        pl = self.placement
+        if pl.mesh is not None:
+            row_sh = pl.vector(n)                  # P(particle_axis), rest ∅
+            outs = jax.lax.with_sharding_constraint(outs, row_sh)
+            # the BMA all-to-all as one on-device collective: every device
+            # gets all members' outputs, then reduces locally (replicated)
+            outs = jax.lax.with_sharding_constraint(outs, pl.replicated(outs))
+        return uncertainty.predictive_heads(outs, self.kind), outs
+
+    def _compile(self, cache_key, build: Callable):
+        prog = self._programs.get(cache_key)
+        if prog is None:
+            prog = build()
+            self._programs[cache_key] = prog
+            self.stats["compiles"] += 1
+        else:
+            self.stats["bucket_hits"] += 1
+        return prog
+
+    def _build_predict(self, stacked, batch, members: bool):
+        pl = self.placement
+        n = _leading(stacked)
+        spmd = pl.spmd_axis(n)
+
+        def fused(stacked_params, b):
+            outs = jax.vmap(self.forward, in_axes=(0, None),
+                            spmd_axis_name=spmd)(stacked_params, b)
+            heads, outs_rep = self._bma_reduce_heads(outs, n)
+            return (heads, outs_rep) if members else heads
+
+        if pl.mesh is None:
+            return jax.jit(fused)
+        return jax.jit(fused,
+                       in_shardings=(pl.shardings(stacked),
+                                     pl.replicated(batch)),
+                       out_shardings=pl.replicated(0))
+
+    def _build_step(self, stacked, state, batch):
+        pl = self.placement
+        n = _leading(stacked)
+        spmd = pl.spmd_axis(n)
+
+        def fused(stacked_params, st, b):
+            outs, new_st = jax.vmap(self.forward, in_axes=(0, 0, None),
+                                    spmd_axis_name=spmd)(stacked_params, st, b)
+            heads, _ = self._bma_reduce_heads(outs, n)
+            return heads, new_st
+
+        if pl.mesh is None:
+            return jax.jit(fused)
+        st_sh = jax.tree.map(lambda _: pl.vector(n), state)
+        return jax.jit(
+            fused,
+            in_shardings=(pl.shardings(stacked), st_sh,
+                          pl.replicated(batch)),
+            out_shardings=(pl.replicated(0), st_sh))
+
+    # -- serving entry points ------------------------------------------------
+    def predict(self, batch, members: bool = False):
+        """Fused BMA forward over a request batch (leading axis B).
+
+        Pads B up to the bucket, runs the cached program for that bucket,
+        slices the heads back to B. ``members=True`` additionally returns
+        the raw stacked member outputs (P, B, ...)."""
+        if self.stateful:
+            raise RuntimeError("stateful engine: use step(state, batch)")
+        self.stats["calls"] += 1
+        stacked = self.stacked_params()
+        m = _leading(batch)
+        padded = pad_rows(batch, bucket_size(m))
+        cache_key = (_leading(stacked), members, _abstract(padded))
+        prog = self._compile(
+            cache_key, lambda: self._build_predict(stacked, padded, members))
+        out = prog(stacked, padded)
+        heads, outs = out if members else (out, None)
+        heads = jax.tree.map(lambda a: a[:m], heads)
+        if members:
+            return heads, jax.tree.map(lambda a: a[:, :m], outs)
+        return heads
+
+    def step(self, state, batch):
+        """One stateful serving step (LM decode): per-particle state (KV
+        caches, leading axis P) stays stacked and on device across steps.
+        Returns (heads, new_state)."""
+        if not self.stateful:
+            raise RuntimeError("stateless engine: use predict(batch)")
+        self.stats["calls"] += 1
+        stacked = self.stacked_params()
+        cache_key = (_leading(stacked), "step", _abstract(state),
+                     _abstract(batch))
+        prog = self._compile(
+            cache_key, lambda: self._build_step(stacked, state, batch))
+        return prog(stacked, state, batch)
+
+    def init_state(self, make_state: Callable):
+        """Build stacked per-particle serving state: ``make_state(row)``
+        maps one particle's params to its state (e.g. prefill -> caches);
+        vmapped over the stacked axis so state is born sharded."""
+        stacked = self.stacked_params()
+        n = _leading(stacked)
+        return jax.jit(jax.vmap(make_state,
+                                spmd_axis_name=self.placement.spmd_axis(n))
+                       )(stacked)
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        return dict(self.stats, programs=len(self._programs))

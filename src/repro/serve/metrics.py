@@ -1,0 +1,104 @@
+"""Calibration metrics for served predictive distributions.
+
+jnp implementations (jit-friendly, usable on device right after a fused
+BMA forward) plus independent NumPy references (``*_ref``) that the test
+suite checks them against — the references are written in the most
+literal textbook form, no shared code with the jnp path.
+
+  nll     mean −log p̄(y)                 (proper score; nats)
+  brier   mean ‖p̄ − onehot(y)‖²          (quadratic proper score)
+  ece     Σ_b (n_b/N) |acc(b) − conf(b)|  (expected calibration error,
+          equal-width confidence bins over (0, 1])
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# jnp implementations (the serving path)
+# ---------------------------------------------------------------------------
+
+def nll(probs, labels):
+    """probs: (B, C) predictive distribution; labels: (B,) i32 -> scalar."""
+    p_gold = jnp.take_along_axis(probs, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(jnp.log(p_gold + EPS))
+
+
+def brier(probs, labels):
+    onehot = jnp.zeros_like(probs).at[jnp.arange(probs.shape[0]),
+                                      labels].set(1.0)
+    return jnp.mean(jnp.sum((probs - onehot) ** 2, axis=-1))
+
+
+def accuracy(probs, labels):
+    return jnp.mean((jnp.argmax(probs, axis=-1) == labels)
+                    .astype(jnp.float32))
+
+
+def ece(probs, labels, n_bins: int = 15):
+    """Equal-width confidence binning over (0, 1]; empty bins contribute 0."""
+    conf = jnp.max(probs, axis=-1)
+    correct = (jnp.argmax(probs, axis=-1) == labels).astype(jnp.float32)
+    # bin i covers (i/n, (i+1)/n]; conf==0 is clamped into bin 0
+    idx = jnp.clip(jnp.ceil(conf * n_bins).astype(jnp.int32) - 1, 0,
+                   n_bins - 1)
+    n_b = jnp.zeros(n_bins).at[idx].add(1.0)
+    conf_b = jnp.zeros(n_bins).at[idx].add(conf)
+    acc_b = jnp.zeros(n_bins).at[idx].add(correct)
+    gap = jnp.abs(acc_b - conf_b)          # n_b * |acc(b) - conf(b)|
+    return jnp.sum(jnp.where(n_b > 0, gap, 0.0)) / probs.shape[0]
+
+
+def calibration_report(probs, labels, n_bins: int = 15) -> Dict[str, float]:
+    """Host-side summary of every metric (one device sync)."""
+    return {"nll": float(nll(probs, labels)),
+            "brier": float(brier(probs, labels)),
+            "ece": float(ece(probs, labels, n_bins)),
+            "accuracy": float(accuracy(probs, labels))}
+
+
+# ---------------------------------------------------------------------------
+# NumPy references (tests only — deliberately independent, literal forms)
+# ---------------------------------------------------------------------------
+
+def nll_ref(probs, labels) -> float:
+    probs, labels = np.asarray(probs), np.asarray(labels)
+    return float(np.mean([-np.log(probs[i, labels[i]] + EPS)
+                          for i in range(len(labels))]))
+
+
+def brier_ref(probs, labels) -> float:
+    probs, labels = np.asarray(probs), np.asarray(labels)
+    total = 0.0
+    for i in range(len(labels)):
+        onehot = np.zeros(probs.shape[1])
+        onehot[labels[i]] = 1.0
+        total += float(np.sum((probs[i] - onehot) ** 2))
+    return total / len(labels)
+
+
+def accuracy_ref(probs, labels) -> float:
+    probs, labels = np.asarray(probs), np.asarray(labels)
+    return float(np.mean(np.argmax(probs, axis=-1) == labels))
+
+
+def ece_ref(probs, labels, n_bins: int = 15) -> float:
+    probs, labels = np.asarray(probs), np.asarray(labels)
+    conf = np.max(probs, axis=-1)
+    pred = np.argmax(probs, axis=-1)
+    total = 0.0
+    for b in range(n_bins):
+        lo, hi = b / n_bins, (b + 1) / n_bins
+        sel = (conf > lo) & (conf <= hi) if b else (conf <= hi)
+        if not np.any(sel):
+            continue
+        acc_b = float(np.mean(pred[sel] == labels[sel]))
+        conf_b = float(np.mean(conf[sel]))
+        total += (np.sum(sel) / len(labels)) * abs(acc_b - conf_b)
+    return total

@@ -1,0 +1,152 @@
+"""Thin sync + async serving front-end: ``serve(pd).predict(x)``.
+
+Wires a PredictiveEngine (fused BMA + uncertainty heads, engine.py) to a
+MicroBatcher (request coalescing, batcher.py) behind a two-call API:
+
+    svc = serve(infer_or_pd)              # after bayes_infer(...)
+    pred = svc.predict(x)                 # one example -> Prediction
+    fut  = svc.predict_async(x)           # PFuture-backed handle
+    preds = fut.result()                  # Prediction
+    heads = svc.predict_batch(batch)      # caller-batched fast path
+
+``stats()`` mirrors the executor's introspection: request/batch counts,
+flush-trigger mix, queue depth, padding occupancy, compile-cache state,
+and p50/p95/p99 request latency from the batcher's ring buffer.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.messages import PFuture
+from ..core.store import Placement
+from .batcher import MicroBatcher
+from .engine import PredictiveEngine
+
+
+@dataclass
+class Prediction:
+    """One request's posterior-predictive summary (all heads computed
+    inside the fused program — reading them costs no extra device work)."""
+    mean: Any                       # BMA mean (probs / regression mean)
+    variance: Any                   # particle disagreement
+    entropy: Any                    # total predictive uncertainty
+    mutual_info: Any                # epistemic part (BALD)
+    expected_entropy: Any = None    # aleatoric part
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    @staticmethod
+    def from_heads(heads: Dict[str, Any]) -> "Prediction":
+        known = ("mean", "variance", "entropy", "mutual_info",
+                 "expected_entropy")
+        return Prediction(**{k: heads[k] for k in known if k in heads},
+                          extras={k: v for k, v in heads.items()
+                                  if k not in known})
+
+
+class PendingPrediction:
+    """Async handle: wraps the batcher's PFuture; ``result()`` blocks."""
+
+    __slots__ = ("_future",)
+
+    def __init__(self, future: PFuture):
+        self._future = future
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = None) -> Prediction:
+        return Prediction.from_heads(self._future.wait(timeout))
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile (np.percentile; q in [0, 100]);
+    0.0 on empty input. bench_serve reports these same values."""
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs), q))
+
+
+class PredictiveService:
+    def __init__(self, engine: PredictiveEngine, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 512):
+        self.engine = engine
+        self.batcher = MicroBatcher(engine.predict, max_batch=max_batch,
+                                    max_wait_ms=max_wait_ms,
+                                    max_queue=max_queue)
+        self._t_start = time.monotonic()
+
+    # -- request paths -------------------------------------------------------
+    def predict_async(self, x) -> PendingPrediction:
+        """Enqueue ONE example (no leading batch axis) for the next fused
+        micro-batch; returns immediately."""
+        return PendingPrediction(self.batcher.submit(x))
+
+    def predict(self, x, timeout: Optional[float] = None) -> Prediction:
+        """Synchronous single-example predict (enqueue + wait)."""
+        return self.predict_async(x).result(timeout)
+
+    def predict_batch(self, batch, members: bool = False):
+        """Caller-assembled batch straight through the engine (no
+        coalescing latency); returns the raw heads dict (leading axis B)."""
+        return self.engine.predict(batch, members=members)
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        lat = self.batcher.latencies_s()
+        bstats = self.batcher.snapshot_stats()
+        elapsed = max(time.monotonic() - self._t_start, 1e-9)
+        return {
+            **bstats,
+            "engine": self.engine.snapshot_stats(),
+            "latency_p50_ms": percentile(lat, 50) * 1e3,
+            "latency_p95_ms": percentile(lat, 95) * 1e3,
+            "latency_p99_ms": percentile(lat, 99) * 1e3,
+            "requests_per_s": bstats["requests"] / elapsed,
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self):
+        self.batcher.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def _resolve_pd(obj):
+    """Accept an Infer, a PushDistribution, or anything with .push_dist."""
+    pd = getattr(obj, "push_dist", obj)
+    if not hasattr(pd, "store") or not hasattr(pd, "module"):
+        raise TypeError(f"cannot serve {type(obj).__name__}: "
+                        "expected an Infer or PushDistribution")
+    return pd
+
+
+def serve(obj, *, kind: str = "classify", max_batch: int = 32,
+          max_wait_ms: float = 2.0, max_queue: int = 512,
+          params: Any = None, forward=None,
+          placement: Optional[Placement] = None) -> PredictiveService:
+    """Turn a trained PushDistribution (or its Infer) into a batched
+    posterior-predictive service.
+
+    Default: serve the store's live ``"params"`` (deep-ensemble BMA over
+    the current particles). ``params=`` overrides with a static stacked
+    tree — the MultiSWAG serve-time sampling handoff
+    (``MultiSWAG.posterior_predictive``) uses this.
+    """
+    pd = _resolve_pd(obj)
+    fwd = forward if forward is not None else pd.module.forward
+    if params is not None:
+        engine = PredictiveEngine(fwd, params=params, kind=kind,
+                                  placement=placement or pd.placement)
+    else:
+        engine = PredictiveEngine(fwd, store=pd.store, kind=kind,
+                                  placement=placement)
+    return PredictiveService(engine, max_batch=max_batch,
+                             max_wait_ms=max_wait_ms, max_queue=max_queue)

@@ -1,0 +1,104 @@
+"""Predictive heads computed *inside* the fused BMA program.
+
+Serving a Bayesian model is only cheap if uncertainty is free: every head
+here is a pure jnp function of the stacked member outputs (leading
+particle axis), so the engine traces them into the same XLA program as
+the forward pass — the heads ride along on device and cost zero extra
+host transfers (the per-member logits never leave the device unless the
+caller explicitly asks for them).
+
+For classification (member outputs = logits, (P, B, C)):
+
+  mean            BMA predictive distribution p̄ = (1/P) Σ_i softmax(z_i)
+  entropy         H[p̄]                       — total predictive uncertainty
+  expected_entropy(1/P) Σ_i H[p_i]           — aleatoric part
+  mutual_info     H[p̄] − (1/P) Σ_i H[p_i]    — epistemic part (BALD)
+  variance        mean_c Var_i[p_i(c)]       — particle disagreement
+
+For regression (member outputs = point predictions, (P, B, ...)):
+
+  mean / variance  moments of the particle mixture (epistemic)
+  entropy          Gaussian-approx ½ log(2πe σ²), averaged over outputs
+  mutual_info      = variance averaged over outputs (all spread between
+                   members is epistemic when members are deltas)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+KINDS = ("classify", "regress")
+
+
+def bma_mean_probs(member_logits):
+    """(P, B, C) logits -> (B, C) BMA predictive probabilities."""
+    probs = jax.nn.softmax(member_logits.astype(jnp.float32), axis=-1)
+    return jnp.mean(probs, axis=0)
+
+
+def predictive_entropy(mean_probs):
+    """H[p̄] in nats, (B, C) -> (B,)."""
+    return -jnp.sum(mean_probs * jnp.log(mean_probs + EPS), axis=-1)
+
+
+def expected_entropy(member_logits):
+    """(1/P) Σ_i H[p_i] in nats, (P, B, C) -> (B,)."""
+    logp = jax.nn.log_softmax(member_logits.astype(jnp.float32), axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)      # (P, B)
+    return jnp.mean(ent, axis=0)
+
+
+def mutual_information(member_logits):
+    """BALD score H[p̄] − E_i H[p_i], (P, B, C) -> (B,). Clamped >= 0
+    (float cancellation can push the difference slightly negative)."""
+    mi = (predictive_entropy(bma_mean_probs(member_logits))
+          - expected_entropy(member_logits))
+    return jnp.maximum(mi, 0.0)
+
+
+def particle_variance(member_probs):
+    """Mean over classes of the across-particle variance, (P,B,C) -> (B,)."""
+    return jnp.mean(jnp.var(member_probs, axis=0), axis=-1)
+
+
+def predictive_heads(member_outputs, kind: str = "classify"):
+    """All heads from one stacked member-output tensor (leading axis P).
+
+    Returns a dict of arrays with leading batch axis B — the engine's
+    fused program returns exactly this dict, so adding a head here makes
+    it free at serve time for every model.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+    x = member_outputs.astype(jnp.float32)
+    if kind == "classify":
+        # composed from the standalone heads above (XLA CSEs the shared
+        # softmax across them — one fused program either way)
+        mean = bma_mean_probs(x)                        # (B, C)
+        ent = predictive_entropy(mean)
+        exp_ent = expected_entropy(x)
+        return {
+            "mean": mean,
+            "variance": particle_variance(jax.nn.softmax(x, axis=-1)),
+            "entropy": ent,
+            "expected_entropy": exp_ent,
+            "mutual_info": jnp.maximum(ent - exp_ent, 0.0),
+        }
+    # regression: members are point predictions (P, B, ...)
+    mean = jnp.mean(x, axis=0)
+    var = jnp.var(x, axis=0)
+    reduce_axes = tuple(range(1, mean.ndim))            # all but batch
+    var_scalar = (jnp.mean(var, axis=reduce_axes) if reduce_axes
+                  else var)
+    ent = 0.5 * jnp.log(2.0 * math.pi * math.e * (var_scalar + EPS))
+    return {
+        "mean": mean,
+        "variance": var,
+        "entropy": ent,
+        "expected_entropy": jnp.zeros_like(ent),
+        "mutual_info": var_scalar,
+    }

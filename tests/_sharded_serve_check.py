@@ -1,0 +1,140 @@
+"""Sharded serving acceptance check (run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``; see
+tests/test_serve.py and the CI sharded matrix job).
+
+Asserts, for a PredictiveService over a 4-device mesh placement:
+  1. fused BMA predict matches a sequential per-particle forward +
+     host-side average to < 1e-5;
+  2. serving reads the store WITHOUT unsharding it: across many
+     requests, zero restacks / unstacks / device_puts / checkouts of
+     stacked state (store.stats deltas are all zero) and the stacked
+     params stay sharded over all 4 devices;
+  3. the served heads are replicated outputs (safe to hand to any host
+     thread) and finite.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bdl import DeepEnsemble
+from repro.core import ParticleModule, Placement
+from repro.launch.mesh import make_bench_mesh
+from repro.optim import sgd
+
+N_DEV = 4
+N_PARTICLES = 4
+FLAT_KEYS = ("stacks", "unstacks", "device_puts", "checkouts", "commits",
+             "row_flushes")
+
+
+def tiny_module():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (3, 5)) * 0.5,
+                "b": jnp.zeros((5,))}
+
+    def loss(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2), {}
+
+    def fwd(p, batch):
+        return batch["x"] @ p["w"] + p["b"]
+
+    return ParticleModule(init, loss, fwd)
+
+
+def check_sharded(store, key):
+    st = store.stacked(key)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(st)[0]:
+        spec = leaf.sharding.spec
+        assert spec and spec[0] == "data", \
+            f"{key}{path}: particle axis not sharded, spec={spec}"
+        devs = {s.device.id for s in leaf.addressable_shards}
+        assert len(devs) == N_DEV, \
+            f"{key}{path}: {len(devs)} devices hold shards, want {N_DEV}"
+
+
+def main():
+    assert len(jax.devices()) == N_DEV, \
+        f"need {N_DEV} forced host devices, got {len(jax.devices())}"
+    placement = Placement(mesh=make_bench_mesh(N_DEV), particle_axis="data",
+                          mode="tp")
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 3))
+    batches = [((x, x @ jnp.ones((3, 5))))]
+    train = [((b[0], b[1])) for b in batches]
+
+    with DeepEnsemble(tiny_module(), num_devices=1, seed=0,
+                      backend="compiled", placement=placement) as de:
+        de.bayes_infer(train, 3, optimizer=sgd(0.05),
+                       num_particles=N_PARTICLES)
+        check_sharded(de.store, "params")
+
+        # host-side reference BMA (reads views: do this BEFORE the
+        # serving-era stats snapshot — view reads legitimately unstack)
+        pids = de.push_dist.particle_ids()
+        probe = {"x": x}
+        member = [np.asarray(batches[0][0] @ de.push_dist.p_params(p)["w"]
+                             + de.push_dist.p_params(p)["b"])
+                  for p in pids]
+        ref_mean = np.mean(np.stack(member), 0)
+
+        with de.posterior_predictive(kind="regress", max_batch=8,
+                                     max_wait_ms=1.0) as svc:
+            heads = svc.predict_batch(probe)        # warmup + compile
+            err = float(np.abs(np.asarray(heads["mean"]) - ref_mean).max())
+            assert err < 1e-5, f"fused BMA vs per-particle loop: {err}"
+
+            before = de.store.snapshot_stats()
+            for i in range(8):
+                pred = svc.predict({"x": np.asarray(x[i % 16])})
+                assert np.isfinite(float(pred.entropy))
+                assert np.all(np.isfinite(np.asarray(pred.mean)))
+            svc.predict_batch(probe)
+            after = de.store.snapshot_stats()
+            delta = {k: after[k] - before[k] for k in FLAT_KEYS}
+            assert all(v == 0 for v in delta.values()), \
+                f"serving touched stacked state: {delta}"
+
+            # the store is still sharded over all devices after serving
+            check_sharded(de.store, "params")
+
+            # heads come back replicated: any host thread may consume them
+            spec = heads["mean"].sharding.spec if hasattr(
+                heads["mean"], "sharding") else None
+            assert not spec or all(s is None for s in spec), \
+                f"heads not replicated: {spec}"
+
+            st = svc.stats()
+            assert st["requests"] == 8 and st["batches"] >= 1
+
+        # stateful serving under the mesh: per-particle serving state is
+        # born sharded over the particle axis and stays there across steps
+        from repro.serve import PredictiveEngine
+
+        def step_fwd(p, state, batch):
+            out = batch["x"] @ p["w"] + p["b"] + state["acc"]
+            return out, {"acc": state["acc"] + 1.0}
+
+        eng = PredictiveEngine(step_fwd, store=de.store, kind="regress",
+                               stateful=True)
+        state = eng.init_state(lambda p: {"acc": jnp.zeros(())})
+        for step in range(2):
+            heads, state = eng.step(state, probe)
+            want = ref_mean + step
+            serr = float(np.abs(np.asarray(heads["mean"]) - want).max())
+            assert serr < 1e-5, f"stateful BMA step {step}: {serr}"
+        spec = state["acc"].sharding.spec
+        assert spec and spec[0] == "data", \
+            f"serving state not particle-sharded: {spec}"
+
+    print(f"parity {err:.2e}, stacked state untouched across requests "
+          f"({N_DEV} devices), heads replicated, stateful state sharded")
+    print("OK")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
