@@ -1,0 +1,126 @@
+"""Runtime-layer compile economics across the train -> serve lifecycle.
+
+Measures what the shared ProgramCache (repro.runtime) buys: how many cold
+compiles one full lifecycle costs (fused training, fused predict, a
+micro-batched service over mixed request sizes, then a SECOND service
+over the same store), the cache hit rate, and the cold-vs-warm call
+latency gap per program family.
+
+Rows (``compile/...``) land in BENCH_runtime.json via ``run.py --only
+compile``; CI gates on ``--require-hit-rate`` — if the lifecycle's hit
+rate drops below the floor, some path stopped sharing programs (a
+regression to the pre-runtime world of one private cache per subsystem).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.bdl import DeepEnsemble
+from repro.data.synthetic import mnist_like
+from repro.optim import sgd
+from repro.runtime import global_cache
+
+from .util import emit, tiny_module
+
+N_PARTICLES = 4
+EPOCHS = 10
+BATCH = 16
+# a serving burst: mixed sizes, each bucket hit more than once (the
+# steady-state mix the hit-rate gate models)
+SERVE_SIZES = (1, 2, 3, 4, 5, 7, 8, 8, 3, 5, 1, 6, 2, 8, 4, 7)
+
+
+def _delta(before, after):
+    return {k: after[k] - before[k] for k in
+            ("hits", "misses", "cold_compiles")}
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run(require_hit_rate: float = 0.0) -> int:
+    cache = global_cache()
+    mod = tiny_module()
+    batch = mnist_like(np.random.default_rng(0), BATCH)
+    data = [batch]
+    probe = batch
+
+    t_start = cache.snapshot_stats()
+    with DeepEnsemble(mod, backend="compiled", seed=0) as de:
+        # -- train: one ensemble_step program, reused every epoch --------
+        before = cache.snapshot_stats()
+        us = _timed(lambda: de.bayes_infer(
+            data, EPOCHS, optimizer=sgd(0.05), num_particles=N_PARTICLES))
+        d = _delta(before, cache.snapshot_stats())
+        emit("compile/train_epochs", us,
+             f"cold={d['cold_compiles']} hits={d['hits']}")
+
+        # -- fused predict: cold then warm -------------------------------
+        cold_us = _timed(lambda: de.posterior_pred(probe))
+        warm_us = _timed(lambda: de.posterior_pred(probe))
+        emit("compile/predict_cold", cold_us, "first call (compiles)")
+        emit("compile/predict_warm", warm_us,
+             f"speedup={cold_us / max(warm_us, 1e-9):.1f}x")
+
+        # -- serve: mixed batch sizes share power-of-two buckets ---------
+        imgs = batch["images"]
+        before = cache.snapshot_stats()
+        with de.posterior_predictive(kind="classify") as svc:
+            us = _timed(lambda: [svc.predict_batch({"images": imgs[:m]})
+                                 for m in SERVE_SIZES])
+        d = _delta(before, cache.snapshot_stats())
+        emit("compile/serve_mixed_batches", us,
+             f"cold={d['cold_compiles']} hits={d['hits']} "
+             f"({len(SERVE_SIZES)} sizes)")
+
+        # -- second service over the same store: must compile nothing ----
+        before = cache.snapshot_stats()
+        with de.posterior_predictive(kind="classify") as svc2:
+            us = _timed(lambda: [svc2.predict_batch({"images": imgs[:m]})
+                                 for m in (8, 4, 2)])
+        d = _delta(before, cache.snapshot_stats())
+        emit("compile/second_service", us,
+             f"cold={d['cold_compiles']} hits={d['hits']}")
+        second_cold = d["cold_compiles"]
+
+    total = _delta(t_start, cache.snapshot_stats())
+    seen = total["hits"] + total["misses"]
+    hit_rate = total["hits"] / seen if seen else 0.0
+    emit("compile/lifecycle", 0.0,
+         f"cold={total['cold_compiles']} hit_rate={hit_rate:.3f}")
+
+    if second_cold != 0:
+        print(f"# FAIL: second service cold-compiled {second_cold} "
+              "programs (cross-engine reuse broken)", flush=True)
+        return 1
+    if hit_rate < require_hit_rate:
+        print(f"# FAIL: lifecycle hit rate {hit_rate:.3f} < required "
+              f"{require_hit_rate:.3f}", flush=True)
+        return 1
+    if require_hit_rate:
+        print(f"# PASS: hit rate {hit_rate:.3f} >= {require_hit_rate:.3f}, "
+              "second service compiled nothing", flush=True)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--require-hit-rate", type=float, default=0.0,
+                    help="exit nonzero if the lifecycle cache hit rate "
+                         "falls below this floor (CI gate)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    return run(require_hit_rate=args.require_hit_rate)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

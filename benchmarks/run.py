@@ -15,6 +15,10 @@ one-request-at-a-time throughput, fused-call latency across batch sizes
 and particle counts); CI enforces the >= 3x micro-batching bar via
 ``bench_serve --require``.
 
+Compile rows land in ``BENCH_runtime.json`` (cold-compile counts and
+ProgramCache hit rate across the train -> serve lifecycle); CI enforces
+a minimum hit rate via ``bench_compile --require-hit-rate``.
+
   bench_scaling          Fig. 4 / Fig. 7  (particles x algorithms x devices)
   bench_depth_particles  Table 1          (depth vs particle tradeoff)
   bench_stress           Table 2 / C.3    (particle-cache oversubscription)
@@ -22,6 +26,7 @@ and particle counts); CI enforces the >= 3x micro-batching bar via
   bench_kernels          (ours)           Pallas kernels + SVGD impls
   bench_dispatch         (ours)           event-loop vs thread-per-dispatch
   bench_serve            (ours)           posterior-predictive serving layer
+  bench_compile          (ours)           ProgramCache compile economics
 """
 import argparse
 import functools
@@ -40,10 +45,12 @@ def main() -> None:
                     help="where to persist the scaling rows")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="where to persist the serving rows")
+    ap.add_argument("--runtime-json", default="BENCH_runtime.json",
+                    help="where to persist the compile/cache rows")
     args = ap.parse_args()
-    from . import (bench_accuracy, bench_depth_particles, bench_dispatch,
-                   bench_kernels, bench_scaling, bench_serve, bench_stress,
-                   util)
+    from . import (bench_accuracy, bench_compile, bench_depth_particles,
+                   bench_dispatch, bench_kernels, bench_scaling, bench_serve,
+                   bench_stress, util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
                                      backend=args.scaling_backend),
@@ -53,6 +60,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "dispatch": bench_dispatch.run,
         "serve": bench_serve.run,
+        "compile": bench_compile.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
@@ -76,6 +84,16 @@ def main() -> None:
             json.dump({"devices": len(jax.devices()), "rows": rows}, f,
                       indent=1)
         print(f"# wrote {len(rows)} serve rows -> {args.serve_json}",
+              flush=True)
+    if "compile" in only:
+        import jax
+        from repro.runtime import global_cache
+        rows = [r for r in util.ROWS if r["name"].startswith("compile/")]
+        with open(args.runtime_json, "w") as f:
+            json.dump({"devices": len(jax.devices()),
+                       "cache": global_cache().snapshot_stats(),
+                       "rows": rows}, f, indent=1)
+        print(f"# wrote {len(rows)} compile rows -> {args.runtime_json}",
               flush=True)
 
 

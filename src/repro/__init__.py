@@ -1,8 +1,10 @@
 """repro: Push (concurrent probabilistic programming for BDL) in JAX.
 
-Layers: core (particle abstraction) / bdl (inference algorithms) /
-serve (batched posterior-predictive serving) / models+configs
-(architecture zoo) / optim / data / checkpoint / kernels (Pallas TPU) /
-sharding+launch (multi-pod distribution).
+Layers: core (particle abstraction) / runtime (plan/compile/execute
+layer: ProgramSpec + process-wide ProgramCache + NelRuntime/
+CompiledRuntime) / bdl (inference algorithms) / serve (batched
+posterior-predictive serving) / models+configs (architecture zoo) /
+optim / data / checkpoint / kernels (Pallas TPU) / sharding+launch
+(multi-pod distribution).
 """
 __version__ = "1.0.0"

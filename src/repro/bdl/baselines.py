@@ -19,32 +19,69 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from functools import partial
-
+from ..runtime import ident, jit_program
 from .svgd import svgd_force
 from .swag import swag_collect, swag_state_init
 
+# The baselines are deliberately sequential, but their single-NN programs
+# still compile through the shared runtime cache (jit_program): one
+# compiled program per module, visible in the same hit/miss/cold-compile
+# stats as the particle paths. Fetched Programs are memoized module-level
+# (keyed on the same identity tokens the cache uses) so the per-step host
+# cost stays a dict lookup — the timed baseline rows must measure the
+# sequential math, not cache-key construction.
 
-@partial(jax.jit, static_argnums=(0, 1))
+_PROGRAMS: dict = {}
+
+
+def _memo_program(name, key, fn, args):
+    prog = _PROGRAMS.get(key)
+    if prog is None:
+        prog = _PROGRAMS[key] = jit_program(name, key, fn, args)
+    return prog
+
+
 def _jit_sgd_step(module, optimizer, params, opt_state, batch):
-    loss, grads = jax.value_and_grad(lambda p: module.loss(p, batch)[0])(params)
-    params, opt_state = optimizer.update(params, grads, opt_state)
-    return params, opt_state, loss
+    def step(p, s, b):
+        loss, grads = jax.value_and_grad(lambda pp: module.loss(pp, b)[0])(p)
+        new_p, new_s = optimizer.update(p, grads, s)
+        return new_p, new_s, loss
+
+    prog = _memo_program(
+        "baseline_sgd_step",
+        ("baseline_sgd_step", ident(module), ident(optimizer)),
+        step, (params, opt_state, batch))
+    return prog(params, opt_state, batch)
 
 
-@partial(jax.jit, static_argnums=(0,))
 def _jit_grad(module, params, batch):
-    return jax.grad(lambda p: module.loss(p, batch)[0])(params)
+    def g(p, b):
+        return jax.grad(lambda pp: module.loss(pp, b)[0])(p)
+
+    prog = _memo_program("baseline_grad", ("baseline_grad", ident(module)),
+                         g, (params, batch))
+    return prog(params, batch)
 
 
-@partial(jax.jit, static_argnums=(2, 3))
 def _jit_kernel_update(theta, g, lr, lengthscale):
-    return theta - lr * svgd_force(theta, g, lengthscale)
+    def upd(t, gg):
+        return t - lr * svgd_force(t, gg, lengthscale)
+
+    prog = _memo_program(
+        "baseline_kernel_update",
+        ("baseline_kernel_update", float(lr), float(lengthscale)),
+        upd, (theta, g))
+    return prog(theta, g)
 
 
-@jax.jit
-def _jit_collect(state, params):
+def _baseline_collect(state, params):
     return swag_collect(state, params, use_kernel=False)
+
+
+def _jit_collect(state, params):
+    prog = _memo_program("baseline_swag_collect", ("baseline_swag_collect",),
+                         _baseline_collect, (state, params))
+    return prog(state, params)
 
 
 def ensemble_baseline(module, optimizer, n: int, dataloader, epochs: int,

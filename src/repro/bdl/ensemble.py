@@ -5,19 +5,18 @@ independently on its own device timeline; the NEL overlaps their steps
 across devices. This is the best-scaling algorithm in the paper's Fig. 4.
 
 Under ``backend="compiled"`` the same algorithm lowers to one fused XLA
-program over the stacked particle axis (core/functional.py): identical
-per-particle inits (the PD's rng stream is shared by both paths), one
-vmapped value_and_grad + optimizer update per batch, state checked out of
-the ParticleStore once, donated to XLA every step (multi-epoch training
-never leaves the device), and committed back once at the end. With a
-mesh placement the particle axis is sharded across devices
-(``spmd_axis_name`` + explicit in/out shardings).
+program over the stacked particle axis: ``_fused_epochs`` is a thin
+builder over the runtime layer — one ``ensemble_step`` ProgramSpec
+(repro.runtime.specs), lowered/cached by the shared ProgramCache, driven
+on state checked out of the ParticleStore once, donated to XLA every step
+(multi-epoch training never leaves the device), and committed back once
+at the end. Identical per-particle inits (the PD's rng stream is shared
+by both paths); with a mesh placement the particle axis is sharded across
+devices (``spmd_axis_name`` + explicit in/out shardings).
 """
 from __future__ import annotations
 
-import jax
-
-from ..core import functional
+from ..runtime import specs
 from .infer import Infer
 
 
@@ -44,23 +43,37 @@ class DeepEnsemble(Infer):
         (store checkout -> donated compiled loop -> one commit). Reused by
         benchmarks so the timed region is exactly the backend="compiled"
         epoch path."""
-        placement = self.placement
-        self._reset_step_cache((id(optimizer), id(placement), len(pids)))
-        ls = None
+        rt = self._compiled_runtime()
+        spec = specs.ensemble_step(self.module.loss, optimizer)
+        prog, ls = None, None
         with self._checked_out(pids, ("params", "opt_state")) as co:
             for _ in range(epochs):
                 for batch in dataloader:
-                    if self._step is None:  # compile against the real batch
-                        self._step = functional.compile_ensemble_step(
-                            self.module.loss, optimizer, placement,
-                            co["params"], co["opt_state"], batch)
-                    co["params"], co["opt_state"], ls = self._step(
+                    if prog is None:  # one cache lookup per fused run
+                        prog = rt.program(spec, co["params"],
+                                          co["opt_state"], batch)
+                    co["params"], co["opt_state"], ls = prog(
                         co["params"], co["opt_state"], batch)
         return [] if ls is None else [float(l) for l in ls]
 
 
 def compiled_ensemble_step(module, optimizer):
-    """Fused path: all particles in one XLA program (single-device form;
-    mesh-aware compilation lives in functional.compile_ensemble_step)."""
-    step = functional.ensemble_step(module.loss, optimizer)
-    return jax.jit(step)
+    """Fused path: all particles in one XLA program. Returns a callable
+    compiling lazily per argument shapes through the shared ProgramCache
+    (single-device form; pass a placement via runtime specs for meshes).
+
+    NON-donating (dataclasses.replace of the epoch-loop spec): callers
+    of this standalone helper may reuse their input arrays after the
+    call — the donation plan is part of the cache key, so this never
+    collides with the donating program the epoch loop uses."""
+    import dataclasses
+
+    from ..runtime import global_cache
+    spec = dataclasses.replace(specs.ensemble_step(module.loss, optimizer),
+                               donate=())
+    cache = global_cache()
+
+    def step(stacked_params, stacked_opt_state, batch):
+        return cache.run(spec, stacked_params, stacked_opt_state, batch)
+
+    return step

@@ -2,12 +2,14 @@
 inference as concurrent procedures on particles. The same algorithm code is
 agnostic to the number of devices (paper §B.2 comment 2).
 
-Backend seam (DESIGN.md §3): ``bayes_infer`` is the stable entry point.
-Subclasses implement ``_nel_infer`` (the paper-faithful message-passing
-procedure) and may implement ``_fused_infer`` (the compiled stacked-axis
-form from core/functional.py). Under ``backend="compiled"`` the fused form
-is selected transparently when present; algorithms without one fall back
-to the NEL path, so every algorithm runs under either backend.
+Backend seam (DESIGN.md §3, §8): ``bayes_infer`` is the stable entry
+point; it hands the algorithm to the PD's Runtime object
+(``repro.runtime.backends``). Subclasses implement ``_nel_infer`` (the
+paper-faithful message-passing procedure) and may implement
+``_fused_infer`` (thin ProgramSpec builders + an epoch loop on the
+store's checkout/commit protocol). The CompiledRuntime selects the fused
+form transparently when present; algorithms without one fall back to the
+NEL path, so every algorithm runs under either backend.
 
 Placement (DESIGN.md §6): ``placement`` is the mesh/placement plan the
 fused forms compile against — particle axis sharded over the mesh's
@@ -73,17 +75,18 @@ class Infer:
             for k, v in co.items():
                 store.commit(k, v, pids)
 
-    def _reset_step_cache(self, key):
-        """Invalidate the cached fused step when `key` changed; the actual
-        compile happens lazily against the first real batch (so compiling
-        never consumes a dataloader iteration)."""
-        if getattr(self, "_step_key", None) != key:
-            self._step_key, self._step = key, None
+    def _compiled_runtime(self):
+        """The PD's runtime when it is already the compiled one, else a
+        CompiledRuntime over the same PD/cache — benchmarks drive
+        ``_fused_epochs`` directly on NEL-backend instances to time the
+        fused path in isolation."""
+        from ..runtime import CompiledRuntime
+        rt = self.push_dist.runtime
+        return rt if isinstance(rt, CompiledRuntime) \
+            else CompiledRuntime(self.push_dist, rt.cache)
 
     def bayes_infer(self, dataloader, epochs: int, **kw):
-        if self.backend == "compiled" and self._has_fused():
-            return self._fused_infer(dataloader, epochs, **kw)
-        return self._nel_infer(dataloader, epochs, **kw)
+        return self.push_dist.runtime.infer(self, dataloader, epochs, **kw)
 
     def _nel_infer(self, dataloader, epochs: int, **kw):
         raise NotImplementedError

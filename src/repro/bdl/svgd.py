@@ -124,22 +124,41 @@ def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
     return step
 
 
+def svgd_step_spec(loss_fn, *, lr: float, lengthscale: float = 1.0,
+                   use_kernel: bool = False):
+    """ProgramSpec for the fused SVGD step: stacked params sharded over
+    the particle axis and donated across the epoch loop; the kernel
+    matrix's all-to-all stays an on-device all-gather (fused_svgd_step)."""
+    from ..runtime import ProgramSpec, ident
+
+    def make(ctx):
+        return fused_svgd_step(
+            loss_fn, lr=lr, lengthscale=lengthscale, use_kernel=use_kernel,
+            placement=ctx.placement,
+            num_particles=ctx.num_particles or None)
+
+    return ProgramSpec(
+        name="svgd_step",
+        key=("svgd_step", ident(loss_fn), float(lr), float(lengthscale),
+             bool(use_kernel)),
+        make=make,
+        in_kinds=("state", "replicated"),
+        out_kinds=("in:0", "vector"),
+        donate=(0,))
+
+
 def compile_svgd_step(loss_fn, placement, stacked, batch, *, lr: float,
-                      lengthscale: float = 1.0, use_kernel: bool = False):
-    """Jit the fused SVGD step against a placement plan: stacked params
-    sharded over the particle axis and donated across the epoch loop."""
-    placement = placement or Placement()
-    n = jax.tree.leaves(stacked)[0].shape[0]
-    step = fused_svgd_step(loss_fn, lr=lr, lengthscale=lengthscale,
-                           use_kernel=use_kernel, placement=placement,
-                           num_particles=n)
-    if placement.mesh is None:
-        return jax.jit(step, donate_argnums=(0,))
-    p_sh = placement.shardings(stacked)
-    return jax.jit(step,
-                   in_shardings=(p_sh, placement.replicated(batch)),
-                   out_shardings=(p_sh, placement.vector(n)),
-                   donate_argnums=(0,))
+                      lengthscale: float = 1.0, use_kernel: bool = False,
+                      state_token=None):
+    """The fused SVGD step against a placement plan, lowered and cached
+    by the shared ProgramCache (runtime layer). Pass
+    ``state_token=store.generation()`` to share the entry with programs
+    the Runtime lowered against that store."""
+    from ..runtime import global_cache
+    spec = svgd_step_spec(loss_fn, lr=lr, lengthscale=lengthscale,
+                          use_kernel=use_kernel)
+    return global_cache().program(spec, placement, (stacked, batch),
+                                  state_token)
 
 
 # ---------------------------------------------------------------------------
@@ -229,15 +248,14 @@ class SteinVGD(Infer):
 
     def _fused_epochs(self, pids, dataloader, epochs: int, *,
                       lr: float = 1e-3, lengthscale: float = 1.0):
-        placement = self.placement
-        self._reset_step_cache((lr, lengthscale, id(placement), len(pids)))
-        ls = None
+        rt = self._compiled_runtime()
+        spec = svgd_step_spec(self.module.loss, lr=lr,
+                              lengthscale=lengthscale)
+        prog, ls = None, None
         with self._checked_out(pids, ("params",)) as co:
             for _ in range(epochs):
                 for batch in dataloader:
-                    if self._step is None:  # compile against the real batch
-                        self._step = compile_svgd_step(
-                            self.module.loss, placement, co["params"],
-                            batch, lr=lr, lengthscale=lengthscale)
-                    co["params"], ls = self._step(co["params"], batch)
+                    if prog is None:  # one cache lookup per fused run
+                        prog = rt.program(spec, co["params"], batch)
+                    co["params"], ls = prog(co["params"], batch)
         return [] if ls is None else [float(l) for l in ls]

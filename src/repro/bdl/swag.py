@@ -136,6 +136,13 @@ def swag_sample_stacked(stacked_state, rng, samples_per_particle: int,
 # particle-based multi-SWAG (the paper's path)
 # ---------------------------------------------------------------------------
 
+def _swag_collect_fused(state, params):
+    """Module-level (stable identity) body of the fused moment-collection
+    map_step — the ProgramCache keys on it, so every MultiSWAG in the
+    process shares one compiled collection program per shape."""
+    return swag_collect(state, params, use_kernel=False)
+
+
 def _swag_step(particle, batch):
     return particle.step(batch).wait()
 
@@ -184,32 +191,30 @@ class MultiSWAG(Infer):
 
     def _fused_epochs(self, pids, dataloader, epochs: int, *, optimizer,
                       pretrain_epochs: int = 0):
-        """Stacked-axis multi-SWAG on existing particles: vmapped train step
-        + vmapped moment collection, all state (params, opt, SWAG moments)
-        checked out of the store once, donated across the epoch loop, and
+        """Stacked-axis multi-SWAG on existing particles — two thin
+        ProgramSpecs on the runtime layer (vmapped train step + vmapped
+        moment collection), all state (params, opt, SWAG moments) checked
+        out of the store once, donated across the epoch loop, and
         committed back once at the end."""
-        from ..core import functional
-        placement = self.placement
-        key = (id(optimizer), id(placement), len(pids))
-        if getattr(self, "_step_key", None) != key:
-            self._collect = None
-        self._reset_step_cache(key)
-        ls = None
+        from ..runtime import specs
+        rt = self._compiled_runtime()
+        step_spec = specs.ensemble_step(self.module.loss, optimizer)
+        collect_spec = specs.map_step(_swag_collect_fused,
+                                      key=("swag_collect",), n_state=2)
+        step, collect, ls = None, None, None
         with self._checked_out(pids, ("params", "opt_state", "swag")) as co:
             for e in range(epochs):
                 for batch in dataloader:
-                    if self._step is None:  # compile against the real batch
-                        self._step = functional.compile_ensemble_step(
-                            self.module.loss, optimizer, placement,
-                            co["params"], co["opt_state"], batch)
-                    co["params"], co["opt_state"], ls = self._step(
+                    if step is None:  # one cache lookup per fused run
+                        step = rt.program(step_spec, co["params"],
+                                          co["opt_state"], batch)
+                    co["params"], co["opt_state"], ls = step(
                         co["params"], co["opt_state"], batch)
                 if e >= pretrain_epochs:
-                    if self._collect is None:
-                        self._collect = functional.compile_map_step(
-                            lambda s, p: swag_collect(s, p, use_kernel=False),
-                            placement, co["swag"], co["params"])
-                    co["swag"] = self._collect(co["swag"], co["params"])
+                    if collect is None:
+                        collect = rt.program(collect_spec, co["swag"],
+                                             co["params"])
+                    co["swag"] = collect(co["swag"], co["params"])
         return [] if ls is None else [float(l) for l in ls]
 
     def posterior_predictive(self, *, samples_per_particle: int = 0,

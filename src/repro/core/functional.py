@@ -7,16 +7,19 @@ particle-local computation is vmapped, and every particle-to-particle
 communication pattern becomes an array op (all-to-all gather = the stacked
 matrix itself; on a sharded mesh, XLA's all-gather over the particle axis).
 
-Mesh-aware compilation (`compile_*`): given a `store.Placement` the fused
-steps are jitted with explicit ``in_shardings``/``out_shardings`` derived
-from ``sharding/rules`` (particle axis leading, within-particle rules on
-the trailing dims), ``donate_argnums`` on the stacked state so multi-epoch
-training never leaves the device (XLA reuses the buffers in place), and
-``vmap(..., spmd_axis_name=particle_axis)`` so GSPMD distributes particles
-across the mesh. With ``Placement(mesh=None)`` the same builders degrade
-to plain single-device jit — one code path, placement decided by
-shardings. EXPERIMENTS.md §Perf quantifies NEL vs compiled on identical
-SVGD workloads.
+Mesh-aware compilation (`compile_*`) delegates to the runtime layer
+(``repro.runtime``, DESIGN.md §8): a ProgramSpec names the step and the
+role of each argument; `runtime.program.lower` jits it with explicit
+``in_shardings``/``out_shardings`` derived from ``sharding/rules``
+(particle axis leading, within-particle rules on the trailing dims),
+``donate_argnums`` on the stacked state so multi-epoch training never
+leaves the device (XLA reuses the buffers in place), and ``vmap(...,
+spmd_axis_name=particle_axis)`` so GSPMD distributes particles across the
+mesh. With ``Placement(mesh=None)`` the same specs degrade to plain
+single-device jit — one code path, placement decided by shardings; the
+process-wide ProgramCache dedupes compiles across train/predict/serve.
+EXPERIMENTS.md §Perf quantifies NEL vs compiled on identical SVGD
+workloads.
 """
 from __future__ import annotations
 
@@ -91,56 +94,49 @@ def ensemble_predict(forward: Callable,
 
 
 # ---------------------------------------------------------------------------
-# mesh-aware compilation: placement -> jitted step with explicit shardings
+# mesh-aware compilation — kept as thin entry points that delegate to the
+# runtime layer (repro.runtime): the spec builders below name the program,
+# the ProgramCache lowers/jits/caches it. These helpers return the cached
+# Program for the given example arguments; repeated calls with the same
+# shapes are cache hits, not recompiles. (Lazy imports: core must not
+# import repro.runtime at module load — runtime imports core.store.)
 # ---------------------------------------------------------------------------
-
-def _n_particles(stacked) -> int:
-    return jax.tree.leaves(stacked)[0].shape[0]
-
 
 def compile_ensemble_step(loss_fn: Callable, optimizer,
                           placement: Optional[Placement],
-                          stacked, opt_state, batch):
-    """Jit one ensemble train step against a placement plan.
+                          stacked, opt_state, batch, *, state_token=None):
+    """One ensemble train step against a placement plan.
 
     State shardings come from the placement (particle axis + rules); the
     batch is replicated (every particle sees the same data). The stacked
     params/opt buffers are donated: across a multi-epoch loop the state
-    never leaves the device — write-back happens once, at commit time."""
-    placement = placement or Placement()
-    n = _n_particles(stacked)
-    step = ensemble_step(loss_fn, optimizer, placement.spmd_axis(n))
-    if placement.mesh is None:
-        return jax.jit(step, donate_argnums=(0, 1))
-    p_sh = placement.shardings(stacked)
-    o_sh = placement.shardings(opt_state)
-    return jax.jit(step,
-                   in_shardings=(p_sh, o_sh, placement.replicated(batch)),
-                   out_shardings=(p_sh, o_sh, placement.vector(n)),
-                   donate_argnums=(0, 1))
+    never leaves the device — write-back happens once, at commit time.
+
+    Pass ``state_token=store.generation()`` to share the cache entry
+    with programs the Runtime lowered against that store."""
+    from ..runtime import global_cache, specs
+    return global_cache().program(specs.ensemble_step(loss_fn, optimizer),
+                                  placement, (stacked, opt_state, batch),
+                                  state_token)
 
 
 def compile_ensemble_predict(forward: Callable,
-                             placement: Optional[Placement], stacked, batch):
-    """Jit the fused posterior-predictive program against a placement."""
-    placement = placement or Placement()
-    n = _n_particles(stacked)
-    f = ensemble_predict(forward, placement.spmd_axis(n))
-    if placement.mesh is None:
-        return jax.jit(f)
-    return jax.jit(f, in_shardings=(placement.shardings(stacked),
-                                    placement.replicated(batch)))
+                             placement: Optional[Placement], stacked, batch,
+                             *, state_token=None):
+    """The fused posterior-predictive program against a placement."""
+    from ..runtime import global_cache, specs
+    return global_cache().program(specs.ensemble_predict(forward),
+                                  placement, (stacked, batch), state_token)
 
 
 def compile_map_step(fn: Callable, placement: Optional[Placement],
-                     *stacked_args):
-    """Jit a per-particle map (e.g. SWAG moment collection) over stacked
-    state trees, sharded and donated like the train step."""
-    placement = placement or Placement()
-    n = _n_particles(stacked_args[0])
-    vm = jax.vmap(fn, spmd_axis_name=placement.spmd_axis(n))
-    if placement.mesh is None:
-        return jax.jit(vm, donate_argnums=(0,))
-    shs = tuple(placement.shardings(a) for a in stacked_args)
-    return jax.jit(vm, in_shardings=shs, out_shardings=shs[0],
-                   donate_argnums=(0,))
+                     *stacked_args, state_token=None):
+    """A per-particle map (e.g. SWAG moment collection) over stacked
+    state trees, sharded and donated like the train step.
+
+    NOTE: the cache keys on ``fn``'s identity — pass a module-level (or
+    otherwise long-lived) function; a fresh lambda per call defeats the
+    cache and cold-compiles every time (bounded only by the cache's LRU)."""
+    from ..runtime import global_cache, ident, specs
+    spec = specs.map_step(fn, key=(ident(fn),), n_state=len(stacked_args))
+    return global_cache().program(spec, placement, stacked_args, state_token)

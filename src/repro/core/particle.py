@@ -28,6 +28,18 @@ class ParticleModule:
 
     init(rng) -> params ; loss(params, batch) -> (scalar, metrics) ;
     forward(params, batch) -> outputs.
+
+    The per-particle step/forward programs compile through the shared
+    runtime layer (``repro.runtime.jit_program``), keyed on the loss /
+    forward function identity — so every particle of a PD (and every PD
+    over the same module) shares ONE compiled program, and NEL compiles
+    show up in the same ProgramCache stats as fused and serving ones
+    (``PushDistribution.stats()``). The Program is fetched from the
+    cache once and memoized on the module: its plain-jit wrapper is
+    shape-polymorphic (no shardings, no donation), so the per-dispatch
+    hot path after the first call is a single attribute check — no
+    process-wide lock, no key construction (the PR-1 executor's
+    dispatch-throughput bar depends on this staying cheap).
     """
 
     def __init__(self, init: Callable, loss: Callable, forward: Callable,
@@ -36,10 +48,27 @@ class ParticleModule:
         self.loss = loss
         self.forward = forward
         self.cfg = cfg
-        # jitted helpers shared by every particle of a PD
-        self._value_and_grad = jax.jit(
-            lambda p, b: jax.value_and_grad(lambda pp: loss(pp, b)[0])(p))
-        self._forward = jax.jit(forward)
+        self._vag = lambda p, b: jax.value_and_grad(
+            lambda pp: loss(pp, b)[0])(p)
+        self._vag_prog = None
+        self._fwd_prog = None
+
+    def _value_and_grad(self, params, batch):
+        if self._vag_prog is None:
+            from ..runtime import ident, jit_program
+            self._vag_prog = jit_program(
+                "nel_value_and_grad",
+                ("nel_value_and_grad", ident(self.loss)),
+                self._vag, (params, batch))
+        return self._vag_prog(params, batch)
+
+    def _forward(self, params, batch):
+        if self._fwd_prog is None:
+            from ..runtime import ident, jit_program
+            self._fwd_prog = jit_program(
+                "nel_forward", ("nel_forward", ident(self.forward)),
+                self.forward, (params, batch))
+        return self._fwd_prog(params, batch)
 
 
 class Particle:

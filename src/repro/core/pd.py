@@ -12,19 +12,22 @@ API mirrors the paper's Fig. 2:
             for _ in range(n)]
     pd.p_wait([pd.p_launch(pids[0], "GATHER")])
 
-Runtime backends (DESIGN.md §3):
-  * ``backend="nel"`` (default) — every message runs through the actor
+Runtime backends (DESIGN.md §3, §8): ``backend="nel"|"compiled"`` selects
+a Runtime *object* (repro.runtime.backends) once, at construction — there
+is no string branching on the hot paths.
+  * ``NelRuntime`` (default) — every message runs through the actor
     runtime (persistent per-device event loops, executor.py).
-  * ``backend="compiled"`` — Infer algorithms with a fused stacked-axis
-    form (ensemble/SWAG/SVGD) run through core/functional.py instead:
-    one XLA program over all particles, placed on the PD's mesh
-    (``placement``). Particles still exist — their ``state`` is a lazy
-    per-particle view of the store's stacked pytrees — so views,
-    messaging and ``p_predict`` behave identically. (One deliberate gap:
-    ``gradients()`` stays None after a fused run — intermediate grads
-    live inside the XLA program and are not materialized per step the
-    way the NEL path's ``grad()`` dispatches are.) Algorithms without a
-    fused form transparently fall back to the NEL path.
+  * ``CompiledRuntime`` — Infer algorithms with a fused stacked-axis
+    form (ensemble/SWAG/SVGD) run as ProgramSpecs through the shared
+    ProgramCache instead: one XLA program over all particles, placed on
+    the PD's mesh (``placement``). Particles still exist — their
+    ``state`` is a lazy per-particle view of the store's stacked pytrees
+    — so views, messaging and ``p_predict`` behave identically. (One
+    deliberate gap: ``gradients()`` stays None after a fused run —
+    intermediate grads live inside the XLA program and are not
+    materialized per step the way the NEL path's ``grad()`` dispatches
+    are.) Algorithms without a fused form transparently fall back to the
+    NEL path.
 
 State model (DESIGN.md §6): ``self.store`` (core/store.py) is the single
 source of truth for all per-particle state under either backend. The NEL
@@ -38,13 +41,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 
-from . import functional
+from ..runtime import BACKENDS, make_runtime
 from .messages import PFuture
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
 from .store import ParticleStore, Placement
-
-BACKENDS = ("nel", "compiled")
 
 
 class PushDistribution:
@@ -54,16 +55,23 @@ class PushDistribution:
                  max_pending: int = 4096,
                  placement: Optional[Placement] = None):
         if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+            # validate BEFORE spawning executor threads: a bad backend
+            # must not leak a running NodeEventLoop (nothing would ever
+            # shut it down)
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {backend!r}")
         self.module = module
-        self.backend = backend
         self.nel = NodeEventLoop(num_devices=num_devices, cache_size=cache_size,
                                  offload=offload, max_pending=max_pending)
         self.view_size = view_size
         self._rng = jax.random.PRNGKey(seed)
         self.particles: Dict[int, Particle] = {}
         self.store = ParticleStore(placement)
-        self._predict_step = None
+        self.runtime = make_runtime(backend, self)
+
+    @property
+    def backend(self) -> str:
+        return self.runtime.name
 
     @property
     def placement(self) -> Placement:
@@ -89,7 +97,6 @@ class PushDistribution:
             p.on(msg, fn)
         self.nel._particles[pid] = p
         self.particles[pid] = p
-        self._predict_step = None  # particle count changed: recompile predict
         return pid
 
     def p_launch(self, pid: int, msg: str, *args, **kwargs) -> PFuture:
@@ -124,19 +131,17 @@ class PushDistribution:
     def p_predict(self, batch):
         """hat f(x) = (1/n) sum_i nn_{theta_i}(x) (paper §3.4).
 
-        Under ``backend="compiled"`` this is one fused XLA program over the
-        store's stacked params (functional.ensemble_predict) instead of n
-        sequential NEL forwards with a host wait each."""
-        pids = self.particle_ids()
-        if self.backend == "compiled" and pids:
-            stacked = self.store.stacked("params")
-            if self._predict_step is None:
-                self._predict_step = functional.compile_ensemble_predict(
-                    self.module.forward, self.placement, stacked, batch)
-            return self._predict_step(stacked, batch)
-        futs = [self.particles[pid].forward(batch) for pid in pids]
-        outs = [f.wait() for f in futs]
-        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)
+        Dispatches to the runtime: the CompiledRuntime runs one fused XLA
+        program over the store's stacked params (cached process-wide,
+        invalidated by the store generation when particles are added);
+        the NelRuntime runs n sequential forwards with a host wait each."""
+        return self.runtime.predict(self, batch)
+
+    def stats(self) -> Dict[str, Any]:
+        """Unified observability: executor wait-vs-run counters, NEL
+        dispatch counters, store materialization counts, and the shared
+        ProgramCache's hit/miss/cold-compile stats, in one dict."""
+        return self.runtime.stats()
 
     def serve(self, **kw):
         """Batched posterior-predictive service over this PD's store

@@ -168,6 +168,14 @@ class ParticleStore:
         with self._lock:
             return (self._gen, self._versions.get(key, 0))
 
+    def generation(self) -> int:
+        """The particle-set generation alone: the component of ``version``
+        that ONLY changes when particles are registered. ProgramCache keys
+        carry this (not the per-key edit count — content edits must reuse
+        compiled programs, shape-changing registrations must not)."""
+        with self._lock:
+            return self._gen
+
     def _bump(self, key: str):
         self._versions[key] = self._versions.get(key, 0) + 1
 

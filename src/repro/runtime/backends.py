@@ -1,0 +1,128 @@
+"""Runtime protocol: ``backend="nel"|"compiled"`` selects an object.
+
+``PushDistribution`` used to branch on a backend *string* at every seam
+(``pd.p_predict``, ``Infer.bayes_infer``); each branch then kept its own
+compile cache. Now the string selects a Runtime once, at construction:
+
+  * ``NelRuntime``     — the paper-faithful actor path: inference runs the
+    algorithm's message-passing procedure on the PR-1 Executor (persistent
+    per-device event loops); prediction is n sequential per-particle
+    forwards. Its per-particle step/forward programs ALSO compile through
+    the shared ProgramCache (``jit_program`` via ``ParticleModule``), so
+    all three workloads — train, serve, NEL — share one compile layer.
+  * ``CompiledRuntime`` — the fused stacked-axis path: algorithms with a
+    ``_fused_infer`` form run one XLA program over the store's stacked
+    state (checkout -> donated epochs -> commit); algorithms without one
+    transparently fall back to the NEL procedure.
+
+Both expose ``stats()`` merging the executor's wait-vs-run counters with
+the ProgramCache's hit/miss/cold-compile counters — the unified
+observability surface ``PushDistribution.stats()`` returns.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, runtime_checkable
+
+import jax
+
+from .cache import ProgramCache, global_cache
+from .program import ProgramSpec
+from . import specs
+
+BACKENDS = ("nel", "compiled")
+
+
+@runtime_checkable
+class Runtime(Protocol):
+    """What a runtime backend must provide (DESIGN.md §8)."""
+    name: str
+
+    def infer(self, algo, dataloader, epochs: int, **kw): ...
+
+    def predict(self, pd, batch): ...
+
+    def run(self, spec: ProgramSpec, *args, placement=None,
+            state_token=None): ...
+
+    def stats(self) -> Dict[str, Any]: ...
+
+
+class _BaseRuntime:
+    def __init__(self, pd, cache: Optional[ProgramCache] = None):
+        self.pd = pd
+        # explicit None test: an *empty* ProgramCache is falsy (__len__)
+        self.cache = cache if cache is not None else global_cache()
+
+    def program(self, spec: ProgramSpec, *args, placement=None,
+                state_token=None):
+        """plan -> (cached) lower: the Program for this PD's placement
+        and store generation. Epoch loops fetch it ONCE before the loop
+        and call it per batch — the returned jit wrapper handles batch
+        shape changes itself, so the per-step host cost is a plain call,
+        not a cache-key construction over the whole state tree."""
+        if placement is None:
+            placement = self.pd.placement
+        if state_token is None:
+            state_token = self.pd.store.generation()
+        return self.cache.program(spec, placement, args, state_token)
+
+    def run(self, spec: ProgramSpec, *args, placement=None, state_token=None):
+        """plan -> (cached) lower -> execute one fused program against
+        this PD's placement and store generation."""
+        return self.program(spec, *args, placement=placement,
+                            state_token=state_token)(*args)
+
+    def stats(self) -> Dict[str, Any]:
+        ex = self.pd.nel.executor.stats()
+        return {
+            "backend": self.name,
+            "executor": ex,
+            "dispatch": dict(self.pd.nel.stats),
+            "store": self.pd.store.snapshot_stats(),
+            "program_cache": self.cache.snapshot_stats(),
+        }
+
+
+class NelRuntime(_BaseRuntime):
+    """Paper-faithful actor runtime (wraps the PR-1 Executor)."""
+
+    name = "nel"
+
+    def infer(self, algo, dataloader, epochs: int, **kw):
+        return algo._nel_infer(dataloader, epochs, **kw)
+
+    def predict(self, pd, batch):
+        """n per-particle forwards on the event loops + host average."""
+        futs = [pd.particles[pid].forward(batch)
+                for pid in pd.particle_ids()]
+        outs = [f.wait() for f in futs]
+        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *outs)
+
+
+class CompiledRuntime(_BaseRuntime):
+    """Fused stacked-axis runtime (wraps the store's checkout/commit
+    protocol and the shared ProgramCache)."""
+
+    name = "compiled"
+
+    def infer(self, algo, dataloader, epochs: int, **kw):
+        if algo._has_fused():
+            return algo._fused_infer(dataloader, epochs, **kw)
+        return algo._nel_infer(dataloader, epochs, **kw)
+
+    def predict(self, pd, batch):
+        pids = pd.particle_ids()
+        if not pids:
+            return NelRuntime.predict(self, pd, batch)
+        stacked = pd.store.stacked("params")
+        spec = specs.ensemble_predict(pd.module.forward)
+        return self.run(spec, stacked, batch)
+
+
+def make_runtime(backend: str, pd,
+                 cache: Optional[ProgramCache] = None) -> Runtime:
+    if backend == "nel":
+        return NelRuntime(pd, cache)
+    if backend == "compiled":
+        return CompiledRuntime(pd, cache)
+    raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")

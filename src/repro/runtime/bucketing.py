@@ -1,0 +1,32 @@
+"""Power-of-two batch bucketing — shared by the compile cache and the
+serving layer. Request batches are padded up to the next bucket *before*
+the cache lookup, so an engine serving mixed batch sizes holds one
+program per (spec, placement, bucket) instead of one per distinct size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_size(m: int) -> int:
+    """Next power of two >= m."""
+    if m < 1:
+        raise ValueError("batch must be non-empty")
+    b = 1
+    while b < m:
+        b <<= 1
+    return b
+
+
+def pad_rows(tree, target: int):
+    """Pad every leaf's leading axis to `target` by repeating the last
+    row (repeat, not zeros: padding must stay in-distribution for
+    normalization layers; padded rows are sliced off after the call)."""
+    m = jax.tree.leaves(tree)[0].shape[0]
+    if m == target:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (target - m,) + x.shape[1:])]),
+        tree)

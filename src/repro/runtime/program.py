@@ -1,0 +1,203 @@
+"""ProgramSpec — the *plan* stage of the runtime's plan -> lower -> execute.
+
+A ProgramSpec is a declarative description of one fused particle program:
+the pure function (via a ``make(ctx)`` builder so the body can depend on
+the placement / particle count it is lowered against), the *role* of every
+positional argument and output (which decides its sharding under a mesh
+placement), and which arguments are donated to XLA.
+
+Argument kinds (``in_kinds``):
+
+  "state"       stacked per-particle state pytree (leading particle axis).
+                Sharded by ``Placement.shardings`` (particle axis leading,
+                ``sharding/rules`` on the trailing dims). The particle
+                count ``n`` is read off the first "state" argument.
+  "replicated"  replicated on every device (batches: deep-ensemble
+                semantics — every particle sees the same data).
+  "vector"      per-particle scalars stacked to (n,) (losses).
+  "rows"        a pytree whose *every leaf* has a leading particle axis
+                but does not follow parameter sharding rules (serving
+                state such as per-particle KV caches).
+
+Output kinds (``out_kinds``) additionally allow ``"in:<i>"`` — same
+resolved sharding as input ``i`` (the donated-state round trip). A single
+``("replicated",)`` entry is applied as a prefix to the whole output
+tree. ``out_kinds=None`` leaves output layout to XLA.
+
+With ``Placement(mesh=None)`` every kind degrades to "no constraint" and
+lowering is a plain ``jax.jit`` — one code path, placement decided by
+shardings (the Tran et al. 2018 design point the whole repo follows).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import weakref
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.store import Placement
+
+IN_KINDS = ("state", "replicated", "vector", "rows")
+
+
+# ---------------------------------------------------------------------------
+# stable identity tokens for closures / optimizers in spec keys
+# ---------------------------------------------------------------------------
+
+_token_lock = threading.Lock()
+_tokens: "weakref.WeakKeyDictionary[Any, int]" = weakref.WeakKeyDictionary()
+_token_counter = itertools.count()
+
+
+def ident(obj) -> Any:
+    """Stable hashable identity token for an object referenced by a spec
+    key. ``id()`` alone can be reused after GC; a weakref-keyed token
+    cannot collide while either object is alive."""
+    try:
+        with _token_lock:
+            tok = _tokens.get(obj)
+            if tok is None:
+                tok = next(_token_counter)
+                _tokens[obj] = tok
+            return tok
+    except TypeError:  # not weakref-able / unhashable: fall back to id
+        return ("id", id(obj))
+
+
+def abstract_key(tree) -> Tuple:
+    """Hashable (structure, shapes, dtypes) key for one argument."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (str(treedef),
+            tuple((tuple(jnp.shape(x)), jnp.result_type(x).name)
+                  for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# spec / build context / compiled program
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BuildCtx:
+    """What ``ProgramSpec.make`` lowers against: the placement plan, the
+    particle count of the state being traced, and the resolved
+    ``vmap(spmd_axis_name=...)`` (None off-mesh or when n does not divide
+    the mesh's particle axis)."""
+    placement: Placement
+    num_particles: int
+    spmd_axis: Optional[str]
+
+
+@dataclass(frozen=True)
+class ProgramSpec:
+    """Declarative description of one fused program (see module doc)."""
+    name: str                       # human-readable (stats / AOT manifest)
+    key: Tuple                      # stable semantic identity (hashable)
+    make: Callable                  # make(ctx: BuildCtx) -> fn(*args)
+    in_kinds: Tuple[str, ...]       # one kind per positional argument
+    out_kinds: Optional[Tuple[str, ...]] = None
+    donate: Tuple[int, ...] = ()    # argnums donated to XLA
+
+    def __post_init__(self):
+        for k in self.in_kinds:
+            if k not in IN_KINDS:
+                raise ValueError(f"unknown in_kind {k!r}")
+        for k in (self.out_kinds or ()):
+            if k not in ("replicated", "vector", "rows") \
+                    and not k.startswith("in:"):
+                raise ValueError(f"unknown out_kind {k!r}")
+
+
+class Program:
+    """A lowered + jitted program, ready to execute. ``__call__`` is the
+    hot path; everything else is introspection / AOT export support."""
+
+    __slots__ = ("fn", "name", "cache_key", "num_particles",
+                 "abstract_args", "donate")
+
+    def __init__(self, fn, name, cache_key, num_particles, abstract_args,
+                 donate):
+        self.fn = fn
+        self.name = name
+        self.cache_key = cache_key
+        self.num_particles = num_particles
+        self.abstract_args = abstract_args   # ShapeDtypeStruct trees
+        self.donate = donate
+
+    def __call__(self, *args):
+        return self.fn(*args)
+
+    def __repr__(self) -> str:
+        return f"Program({self.name!r}, n={self.num_particles})"
+
+
+# ---------------------------------------------------------------------------
+# lowering: spec + placement + example args -> jitted Program
+# ---------------------------------------------------------------------------
+
+def _num_particles(spec: ProgramSpec, args) -> int:
+    for kind, a in zip(spec.in_kinds, args):
+        if kind == "state":
+            return jax.tree.leaves(a)[0].shape[0]
+    return 0
+
+
+def _in_sharding(kind: str, arg, placement: Placement, n: int):
+    if kind == "state":
+        return placement.shardings(arg)
+    if kind == "replicated":
+        return placement.replicated(arg)
+    if kind == "vector":
+        return placement.vector(n)
+    if kind == "rows":
+        return jax.tree.map(lambda _: placement.vector(n), arg)
+    raise ValueError(kind)
+
+
+def _out_shardings(spec: ProgramSpec, in_shs, placement: Placement, n: int):
+    outs = []
+    for kind in spec.out_kinds:
+        if kind.startswith("in:"):
+            outs.append(in_shs[int(kind[3:])])
+        elif kind == "replicated":
+            outs.append(placement.replicated(0))
+        elif kind == "vector":
+            outs.append(placement.vector(n))
+        else:
+            raise ValueError(kind)
+    # a single entry acts as a prefix over the whole output tree (the
+    # fully-replicated serving heads); multiple entries must match the
+    # output tuple positionally
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def lower(spec: ProgramSpec, placement: Optional[Placement], args,
+          cache_key=None) -> Program:
+    """Lower a spec against a placement plan into a jitted Program.
+
+    This is the ONLY place in the repository that is allowed to call
+    ``jax.jit`` on fused particle programs — train, serve, and NEL
+    backends all compile through here (tests/test_runtime.py greps)."""
+    placement = placement or Placement()
+    n = _num_particles(spec, args)
+    ctx = BuildCtx(placement=placement, num_particles=n,
+                   spmd_axis=placement.spmd_axis(n) if n else None)
+    fn = spec.make(ctx)
+    kwargs = {}
+    if spec.donate:
+        kwargs["donate_argnums"] = spec.donate
+    if placement.mesh is not None:
+        in_shs = tuple(_in_sharding(k, a, placement, n)
+                       for k, a in zip(spec.in_kinds, args))
+        kwargs["in_shardings"] = in_shs
+        if spec.out_kinds is not None:
+            kwargs["out_shardings"] = _out_shardings(spec, in_shs,
+                                                     placement, n)
+    jitted = jax.jit(fn, **kwargs)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tuple(args))
+    return Program(jitted, spec.name, cache_key, n, abstract, spec.donate)

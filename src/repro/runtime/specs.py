@@ -1,0 +1,53 @@
+"""Generic ProgramSpec builders shared by train and predict paths.
+
+Algorithm- and workload-specific specs live next to their math
+(``bdl/svgd.svgd_step_spec``, ``serve/engine``'s BMA specs); the builders
+here cover the shapes every ensemble-family algorithm reuses. All of them
+are *thin*: the functional bodies stay in ``core/functional.py`` — a spec
+only names the function, the argument roles, and the donation plan.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+
+from ..core import functional
+from .program import ProgramSpec, ident
+
+
+def ensemble_step(loss_fn: Callable, optimizer) -> ProgramSpec:
+    """One train step for all particles: vmapped value_and_grad +
+    optimizer update. State donated — a multi-epoch loop reuses the
+    buffers in place and never touches the host."""
+    return ProgramSpec(
+        name="ensemble_step",
+        key=("ensemble_step", ident(loss_fn), ident(optimizer)),
+        make=lambda ctx: functional.ensemble_step(loss_fn, optimizer,
+                                                  ctx.spmd_axis),
+        in_kinds=("state", "state", "replicated"),
+        out_kinds=("in:0", "in:1", "vector"),
+        donate=(0, 1))
+
+
+def ensemble_predict(forward: Callable) -> ProgramSpec:
+    """hat f(x) = (1/n) sum_i nn_{theta_i}(x) — one fused program."""
+    return ProgramSpec(
+        name="ensemble_predict",
+        key=("ensemble_predict", ident(forward)),
+        make=lambda ctx: functional.ensemble_predict(forward, ctx.spmd_axis),
+        in_kinds=("state", "replicated"))
+
+
+def map_step(fn: Callable, *, key: Tuple, n_state: int = 1,
+             donate: Tuple[int, ...] = (0,)) -> ProgramSpec:
+    """A per-particle map vmapped over `n_state` stacked trees (SWAG
+    moment collection), sharded and donated like the train step. ``key``
+    must be stable across calls (use ``ident`` on long-lived functions)."""
+    return ProgramSpec(
+        name="map_step",
+        key=("map_step",) + tuple(key),
+        make=lambda ctx: jax.vmap(fn, spmd_axis_name=ctx.spmd_axis),
+        in_kinds=("state",) * n_state,
+        out_kinds=("in:0",),
+        donate=donate)

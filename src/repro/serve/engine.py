@@ -1,7 +1,7 @@
 """PredictiveEngine: one fused Bayesian-model-averaging forward per request.
 
-The serving counterpart of ``core/functional``'s training builders: the
-engine compiles a single XLA program that runs *all* particles over the
+The serving head of the runtime layer (DESIGN.md §8): the engine builds
+*ProgramSpecs* — a single XLA program that runs *all* particles over the
 store's stacked axis (``vmap(forward, spmd_axis_name=...)``), computes
 every uncertainty head (serve/uncertainty.py) inside that program, and
 reduces over the particle axis **on device** — on a mesh placement the
@@ -16,10 +16,13 @@ engine cache the reference between commits), so serving never unshards,
 restacks, or re-places particle state — the sharded subprocess test
 asserts those stats stay flat across requests.
 
-Compile caching is bucketed per model size: request batches are padded up
-to the next power of two, so an engine serving mixed batch sizes holds
-one compiled program per (particle count, bucket, abstract batch shape)
-instead of one per distinct size.
+Compilation and caching are the shared ProgramCache's job: request
+batches are padded up to the next power of two (runtime.bucketing), the
+cache key carries (spec, placement, store generation, bucketed shapes) —
+so an engine serving mixed batch sizes holds one program per bucket, a
+second engine over the same store+module compiles NOTHING, and training
+commits (which bump the version but not the generation) never invalidate
+serving programs.
 
 Two program shapes:
 
@@ -31,47 +34,31 @@ Two program shapes:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..core.store import ParticleStore, Placement
+from ..runtime import (ProgramCache, ProgramSpec, abstract_key, bucket_size,
+                       global_cache, ident, pad_rows)
 from . import uncertainty
-
-
-def bucket_size(m: int) -> int:
-    """Next power of two >= m (compile-cache bucketing)."""
-    if m < 1:
-        raise ValueError("batch must be non-empty")
-    b = 1
-    while b < m:
-        b <<= 1
-    return b
-
-
-def pad_rows(tree, target: int):
-    """Pad every leaf's leading axis to `target` by repeating the last
-    row (repeat, not zeros: padding must stay in-distribution for
-    normalization layers; padded rows are sliced off after the call)."""
-    m = jax.tree.leaves(tree)[0].shape[0]
-    if m == target:
-        return tree
-    return jax.tree.map(
-        lambda x: jnp.concatenate(
-            [x, jnp.broadcast_to(x[-1:], (target - m,) + x.shape[1:])]),
-        tree)
-
-
-def _abstract(tree) -> Tuple:
-    """Hashable (structure, shapes, dtypes) key for the compile cache."""
-    leaves, treedef = jax.tree.flatten(tree)
-    return (str(treedef),
-            tuple((tuple(x.shape), jnp.result_type(x).name) for x in leaves))
 
 
 def _leading(tree) -> int:
     return jax.tree.leaves(tree)[0].shape[0]
+
+
+def _bma_reduce_heads(outs, placement: Placement, n: int, kind: str):
+    """Heads from stacked member outputs, with the particle-axis
+    reduction expressed as sharding-constraint transitions."""
+    if placement.mesh is not None:
+        row_sh = placement.vector(n)           # P(particle_axis), rest ∅
+        outs = jax.lax.with_sharding_constraint(outs, row_sh)
+        # the BMA all-to-all as one on-device collective: every device
+        # gets all members' outputs, then reduces locally (replicated)
+        outs = jax.lax.with_sharding_constraint(
+            outs, placement.replicated(outs))
+    return uncertainty.predictive_heads(outs, kind), outs
 
 
 class PredictiveEngine:
@@ -88,12 +75,14 @@ class PredictiveEngine:
     placement:  mesh plan; defaults to the store's. Decides the particle
                 axis sharding + the on-device BMA all-gather.
     kind:       "classify" (member outputs are logits) or "regress".
+    cache:      ProgramCache override (tests); defaults process-wide.
     """
 
     def __init__(self, forward: Callable, *,
                  store: Optional[ParticleStore] = None, key: str = "params",
                  params: Any = None, placement: Optional[Placement] = None,
-                 kind: str = "classify", stateful: bool = False):
+                 kind: str = "classify", stateful: bool = False,
+                 cache: Optional[ProgramCache] = None):
         if (store is None) == (params is None):
             raise ValueError("pass exactly one of store= or params=")
         if kind not in uncertainty.KINDS:
@@ -106,15 +95,26 @@ class PredictiveEngine:
         if placement is None:
             placement = store.placement if store is not None else Placement()
         self.placement = placement
+        # explicit None test: an *empty* ProgramCache is falsy (__len__)
+        self.cache = cache if cache is not None else global_cache()
         self._static_params = params
         if params is not None and placement.mesh is not None:
             self._static_params = jax.device_put(
                 params, placement.shardings(params))
         self._params_version: Any = None
         self._params_cache: Any = None
-        self._programs: Dict[Tuple, Callable] = {}
+        # hot-path memos: the abstract key of the (large) stacked-params
+        # tree is recomputed only on store refresh, and the ProgramSpecs
+        # (whose construction takes the ident() token lock) are built
+        # once per engine — a request's host cost is one cache lookup
+        # over the (small) batch shapes
+        self._params_key: Any = None
+        self._spec_memo: Dict[Any, ProgramSpec] = {}
+        self._keys = set()
         self.stats = {"calls": 0, "compiles": 0, "bucket_hits": 0,
                       "param_refreshes": 0}
+        if self._static_params is not None:
+            self._params_key = abstract_key(self._static_params)
 
     # -- stacked params ------------------------------------------------------
     def stacked_params(self):
@@ -127,6 +127,7 @@ class PredictiveEngine:
         if v != self._params_version:
             self._params_cache = self.store.stacked(self.key)
             self._params_version = v
+            self._params_key = abstract_key(self._params_cache)
             self.stats["param_refreshes"] += 1
         return self._params_cache
 
@@ -134,66 +135,74 @@ class PredictiveEngine:
     def num_particles(self) -> int:
         return _leading(self.stacked_params())
 
-    # -- program construction ------------------------------------------------
-    def _bma_reduce_heads(self, outs, n: int):
-        """Heads from stacked member outputs, with the particle-axis
-        reduction expressed as sharding-constraint transitions."""
-        pl = self.placement
-        if pl.mesh is not None:
-            row_sh = pl.vector(n)                  # P(particle_axis), rest ∅
-            outs = jax.lax.with_sharding_constraint(outs, row_sh)
-            # the BMA all-to-all as one on-device collective: every device
-            # gets all members' outputs, then reduces locally (replicated)
-            outs = jax.lax.with_sharding_constraint(outs, pl.replicated(outs))
-        return uncertainty.predictive_heads(outs, self.kind), outs
+    def _state_token(self):
+        """Store generation for the ProgramCache key (particle-set
+        changes recompile; content commits do not); static-params
+        engines key purely on shapes."""
+        return self.store.generation() if self.store is not None else None
 
-    def _compile(self, cache_key, build: Callable):
-        prog = self._programs.get(cache_key)
-        if prog is None:
-            prog = build()
-            self._programs[cache_key] = prog
-            self.stats["compiles"] += 1
-        else:
-            self.stats["bucket_hits"] += 1
+    # -- ProgramSpec builders ------------------------------------------------
+    def _predict_spec(self, members: bool) -> ProgramSpec:
+        memo = self._spec_memo.get(("predict", members))
+        if memo is not None:
+            return memo
+        fwd, kind = self.forward, self.kind
+
+        def make(ctx):
+            def fused(stacked_params, b):
+                outs = jax.vmap(fwd, in_axes=(0, None),
+                                spmd_axis_name=ctx.spmd_axis)(
+                    stacked_params, b)
+                heads, outs_rep = _bma_reduce_heads(outs, ctx.placement,
+                                                    ctx.num_particles, kind)
+                return (heads, outs_rep) if members else heads
+
+            return fused
+
+        spec = ProgramSpec(
+            name="bma_predict",
+            key=("bma_predict", ident(fwd), kind, members),
+            make=make,
+            in_kinds=("state", "replicated"),
+            out_kinds=("replicated",))
+        self._spec_memo[("predict", members)] = spec
+        return spec
+
+    def _step_spec(self) -> ProgramSpec:
+        memo = self._spec_memo.get("step")
+        if memo is not None:
+            return memo
+        fwd, kind = self.forward, self.kind
+
+        def make(ctx):
+            def fused(stacked_params, st, b):
+                outs, new_st = jax.vmap(fwd, in_axes=(0, 0, None),
+                                        spmd_axis_name=ctx.spmd_axis)(
+                    stacked_params, st, b)
+                heads, _ = _bma_reduce_heads(outs, ctx.placement,
+                                             ctx.num_particles, kind)
+                return heads, new_st
+
+            return fused
+
+        spec = ProgramSpec(
+            name="bma_step",
+            key=("bma_step", ident(fwd), kind),
+            make=make,
+            in_kinds=("state", "rows", "replicated"),
+            out_kinds=("replicated", "in:1"))
+        self._spec_memo["step"] = spec
+        return spec
+
+    def _program(self, spec: ProgramSpec, args):
+        # args[0] is always the stacked params tree: reuse the key
+        # memoized at refresh time instead of re-flattening per request
+        arg_keys = (self._params_key,) + (None,) * (len(args) - 1)
+        prog, hit = self.cache.lookup(spec, self.placement, args,
+                                      self._state_token(), arg_keys)
+        self._keys.add(prog.cache_key)
+        self.stats["bucket_hits" if hit else "compiles"] += 1
         return prog
-
-    def _build_predict(self, stacked, batch, members: bool):
-        pl = self.placement
-        n = _leading(stacked)
-        spmd = pl.spmd_axis(n)
-
-        def fused(stacked_params, b):
-            outs = jax.vmap(self.forward, in_axes=(0, None),
-                            spmd_axis_name=spmd)(stacked_params, b)
-            heads, outs_rep = self._bma_reduce_heads(outs, n)
-            return (heads, outs_rep) if members else heads
-
-        if pl.mesh is None:
-            return jax.jit(fused)
-        return jax.jit(fused,
-                       in_shardings=(pl.shardings(stacked),
-                                     pl.replicated(batch)),
-                       out_shardings=pl.replicated(0))
-
-    def _build_step(self, stacked, state, batch):
-        pl = self.placement
-        n = _leading(stacked)
-        spmd = pl.spmd_axis(n)
-
-        def fused(stacked_params, st, b):
-            outs, new_st = jax.vmap(self.forward, in_axes=(0, 0, None),
-                                    spmd_axis_name=spmd)(stacked_params, st, b)
-            heads, _ = self._bma_reduce_heads(outs, n)
-            return heads, new_st
-
-        if pl.mesh is None:
-            return jax.jit(fused)
-        st_sh = jax.tree.map(lambda _: pl.vector(n), state)
-        return jax.jit(
-            fused,
-            in_shardings=(pl.shardings(stacked), st_sh,
-                          pl.replicated(batch)),
-            out_shardings=(pl.replicated(0), st_sh))
 
     # -- serving entry points ------------------------------------------------
     def predict(self, batch, members: bool = False):
@@ -208,9 +217,7 @@ class PredictiveEngine:
         stacked = self.stacked_params()
         m = _leading(batch)
         padded = pad_rows(batch, bucket_size(m))
-        cache_key = (_leading(stacked), members, _abstract(padded))
-        prog = self._compile(
-            cache_key, lambda: self._build_predict(stacked, padded, members))
+        prog = self._program(self._predict_spec(members), (stacked, padded))
         out = prog(stacked, padded)
         heads, outs = out if members else (out, None)
         heads = jax.tree.map(lambda a: a[:m], heads)
@@ -226,10 +233,7 @@ class PredictiveEngine:
             raise RuntimeError("stateless engine: use predict(batch)")
         self.stats["calls"] += 1
         stacked = self.stacked_params()
-        cache_key = (_leading(stacked), "step", _abstract(state),
-                     _abstract(batch))
-        prog = self._compile(
-            cache_key, lambda: self._build_step(stacked, state, batch))
+        prog = self._program(self._step_spec(), (stacked, state, batch))
         return prog(stacked, state, batch)
 
     def init_state(self, make_state: Callable):
@@ -237,10 +241,18 @@ class PredictiveEngine:
         maps one particle's params to its state (e.g. prefill -> caches);
         vmapped over the stacked axis so state is born sharded."""
         stacked = self.stacked_params()
-        n = _leading(stacked)
-        return jax.jit(jax.vmap(make_state,
-                                spmd_axis_name=self.placement.spmd_axis(n))
-                       )(stacked)
+        spec = ProgramSpec(
+            name="serve_init_state",
+            key=("serve_init_state", ident(make_state)),
+            make=lambda ctx: jax.vmap(make_state,
+                                      spmd_axis_name=ctx.spmd_axis),
+            in_kinds=("state",))
+        # not counted in the request-path compile stats: state init is a
+        # one-off setup call, not part of the serving hot path
+        return self.cache.run(spec, stacked,
+                              placement=self.placement,
+                              state_token=self._state_token())
 
     def snapshot_stats(self) -> Dict[str, int]:
-        return dict(self.stats, programs=len(self._programs))
+        return dict(self.stats, programs=len(self._keys),
+                    program_cache=self.cache.snapshot_stats())

@@ -10,7 +10,11 @@ Asserts, for a PredictiveService over a 4-device mesh placement:
      stacked state (store.stats deltas are all zero) and the stacked
      params stay sharded over all 4 devices;
   3. the served heads are replicated outputs (safe to hand to any host
-     thread) and finite.
+     thread) and finite;
+  4. the runtime's process-wide ProgramCache dedupes across subsystems
+     under the mesh too: repeated identical requests and a SECOND
+     service over the same store trigger zero cold compiles while
+     ``store.version()`` is unchanged.
 """
 import os
 import sys
@@ -110,6 +114,29 @@ def main():
 
             st = svc.stats()
             assert st["requests"] == 8 and st["batches"] >= 1
+
+            # runtime-layer hook: identical repeat requests are pure
+            # cache hits — no cold compiles while version is unchanged
+            from repro.runtime import global_cache
+            v = de.store.version("params")
+            cold0 = global_cache().snapshot_stats()["cold_compiles"]
+            svc.predict_batch(probe)
+            assert de.store.version("params") == v
+            assert global_cache().snapshot_stats()["cold_compiles"] == cold0, \
+                "repeat request cold-compiled under the mesh"
+
+        # a fresh service over the same store compiles NOTHING: the
+        # ProgramCache is process-wide and keyed on (spec, placement,
+        # store generation, bucketed shapes) — not the engine instance
+        from repro.runtime import global_cache
+        cold0 = global_cache().snapshot_stats()["cold_compiles"]
+        with de.posterior_predictive(kind="regress", max_batch=8,
+                                     max_wait_ms=1.0) as svc2:
+            heads2 = svc2.predict_batch(probe)
+            err2 = float(np.abs(np.asarray(heads2["mean"]) - ref_mean).max())
+            assert err2 < 1e-5, f"second service BMA: {err2}"
+        assert global_cache().snapshot_stats()["cold_compiles"] == cold0, \
+            "second service over the same store recompiled"
 
         # stateful serving under the mesh: per-particle serving state is
         # born sharded over the particle axis and stays there across steps

@@ -98,17 +98,36 @@ def main():
                     ncommit = after["commits"] - before["commits"]
                     nco = after["checkouts"] - before["checkouts"]
                     assert 1 <= ncommit <= 3 and ncommit == nco, (before, after)
-                    # donation: a checked-out buffer is consumed by the step
+                    # donation: a checked-out buffer is consumed by the
+                    # step program, fetched from the shared ProgramCache
+                    # through the compile_* delegators with the store's
+                    # generation token — a true cache HIT of the exact
+                    # program _fused_epochs lowered (asserted below)
+                    from repro.bdl.svgd import compile_svgd_step
+                    from repro.core import functional
+                    from repro.runtime import global_cache
+                    hits0 = global_cache().snapshot_stats()["hits"]
+                    tok = a.store.generation()
                     st = a.store.checkout("params", pids)
                     if "optimizer" in kw:
                         ost = a.store.checkout("opt_state", pids)
-                        np_, no_, _ = a._step(st, ost, batches[0])
+                        step = functional.compile_ensemble_step(
+                            a.module.loss, kw["optimizer"], placement,
+                            st, ost, batches[0], state_token=tok)
+                        np_, no_, _ = step(st, ost, batches[0])
                         assert st["w"].is_deleted(), "params not donated"
                         a.store.commit("opt_state", no_, pids)
                     else:
-                        np_, _ = a._step(st, batches[0])
+                        step = compile_svgd_step(
+                            a.module.loss, placement, st, batches[0],
+                            lr=kw["lr"], lengthscale=kw["lengthscale"],
+                            state_token=tok)
+                        np_, _ = step(st, batches[0])
                         assert st["w"].is_deleted(), "params not donated"
                     a.store.commit("params", np_, pids)
+                    assert global_cache().snapshot_stats()["hits"] \
+                        == hits0 + 1, "compile_* did not share the " \
+                        "Runtime's cached program"
         err = float(jnp.abs(preds["nel"] - preds["compiled"]).max())
         assert err < 1e-4, f"{algo.__name__}: pred mismatch {err}"
         for pn, pc in zip(params["nel"], params["compiled"]):
