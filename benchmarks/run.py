@@ -27,6 +27,8 @@ a minimum hit rate via ``bench_compile --require-hit-rate``.
   bench_dispatch         (ours)           event-loop vs thread-per-dispatch
   bench_serve            (ours)           posterior-predictive serving layer
   bench_compile          (ours)           ProgramCache compile economics
+  bench_lifecycle        (ours)           elastic churn: ops/sec, recompiles,
+                                          serve latency under clone/kill
 """
 import argparse
 import functools
@@ -47,10 +49,12 @@ def main() -> None:
                     help="where to persist the serving rows")
     ap.add_argument("--runtime-json", default="BENCH_runtime.json",
                     help="where to persist the compile/cache rows")
+    ap.add_argument("--lifecycle-json", default="BENCH_lifecycle.json",
+                    help="where to persist the churn rows")
     args = ap.parse_args()
     from . import (bench_accuracy, bench_compile, bench_depth_particles,
-                   bench_dispatch, bench_kernels, bench_scaling, bench_serve,
-                   bench_stress, util)
+                   bench_dispatch, bench_kernels, bench_lifecycle,
+                   bench_scaling, bench_serve, bench_stress, util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
                                      backend=args.scaling_backend),
@@ -61,6 +65,7 @@ def main() -> None:
         "dispatch": bench_dispatch.run,
         "serve": bench_serve.run,
         "compile": bench_compile.run,
+        "lifecycle": bench_lifecycle.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
@@ -94,6 +99,14 @@ def main() -> None:
                        "cache": global_cache().snapshot_stats(),
                        "rows": rows}, f, indent=1)
         print(f"# wrote {len(rows)} compile rows -> {args.runtime_json}",
+              flush=True)
+    if "lifecycle" in only:
+        import jax
+        rows = [r for r in util.ROWS if r["name"].startswith("lifecycle/")]
+        with open(args.lifecycle_json, "w") as f:
+            json.dump({"devices": len(jax.devices()), "rows": rows}, f,
+                      indent=1)
+        print(f"# wrote {len(rows)} lifecycle rows -> {args.lifecycle_json}",
               flush=True)
 
 

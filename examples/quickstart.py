@@ -79,6 +79,29 @@ def main():
               f"cold_compiles={cache['cold_compiles']} "
               f"hit_rate={cache['hit_rate']:.2f}")
 
+        # 6. Particle lifecycle — clone WHILE serving (DESIGN.md §9).
+        #    The store is capacity-padded, so p_clone/p_kill between
+        #    requests are slot writes: the serving program never
+        #    recompiles, it just re-reads the active mask per request.
+        pd = de.push_dist
+        with de.posterior_predictive(kind="regress") as svc:
+            xt = jnp.linspace(-2, 2, 9).reshape(-1, 1)
+            before = svc.predict_batch((xt, None))
+            cold0 = pd.stats()["program_cache"]["cold_compiles"]
+            worst = pd.particle_ids()[0]
+            pd.p_kill(worst)                       # retire a member...
+            pd.p_clone(pd.particle_ids()[0],       # ...replace it live
+                       jitter=0.05)
+            after = svc.predict_batch((xt, None))
+            lc = pd.stats()["lifecycle"]
+            print(f"cloned while serving: live={lc['live']}/"
+                  f"{lc['capacity']} slots, clones={lc['clones']}, "
+                  f"kills={lc['kills']}, recompiles="
+                  f"{pd.stats()['program_cache']['cold_compiles'] - cold0}")
+            drift = float(jnp.abs(after['mean'] - before['mean']).max())
+            print(f"BMA drift after member swap: {drift:.4f} "
+                  "(small: the clone is a jittered survivor)")
+
 
 if __name__ == "__main__":
     main()

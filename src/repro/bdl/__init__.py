@@ -2,4 +2,4 @@ from .infer import Infer
 from .ensemble import DeepEnsemble, compiled_ensemble_step
 from .swag import MultiSWAG, swag_state_init, swag_collect, swag_sample
 from .svgd import SteinVGD, fused_svgd_step, svgd_force, pairwise_sqdist
-from . import baselines
+from . import baselines, lifecycle

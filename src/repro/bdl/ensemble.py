@@ -45,16 +45,17 @@ class DeepEnsemble(Infer):
         epoch path."""
         rt = self._compiled_runtime()
         spec = specs.ensemble_step(self.module.loss, optimizer)
+        co_pids, mask, slots = self._fused_plan(pids)
         prog, ls = None, None
-        with self._checked_out(pids, ("params", "opt_state")) as co:
+        with self._checked_out(co_pids, ("params", "opt_state")) as co:
             for _ in range(epochs):
                 for batch in dataloader:
                     if prog is None:  # one cache lookup per fused run
                         prog = rt.program(spec, co["params"],
-                                          co["opt_state"], batch)
+                                          co["opt_state"], batch, mask)
                     co["params"], co["opt_state"], ls = prog(
-                        co["params"], co["opt_state"], batch)
-        return [] if ls is None else [float(l) for l in ls]
+                        co["params"], co["opt_state"], batch, mask)
+        return [] if ls is None else [float(ls[s]) for s in slots]
 
 
 def compiled_ensemble_step(module, optimizer):

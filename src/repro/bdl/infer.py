@@ -33,16 +33,20 @@ class Infer:
     def __init__(self, module: ParticleModule, *, num_devices: int = 1,
                  cache_size: int = 4, view_size: int = 4, seed: int = 0,
                  backend: str = "nel",
-                 placement: Optional[Union[Placement, str]] = None):
+                 placement: Optional[Union[Placement, str]] = None,
+                 capacity: int = 0):
         self.module = module
         self.num_devices = num_devices
         if placement == "auto":
             placement = Placement.auto()
+        # capacity preallocates store slots so a planned lifecycle
+        # (bayes_infer then lifecycle.grow) never pays a growth recompile
         self.push_dist = PushDistribution(module, num_devices=num_devices,
                                           cache_size=cache_size,
                                           view_size=view_size, seed=seed,
                                           backend=backend,
-                                          placement=placement)
+                                          placement=placement,
+                                          capacity=capacity)
 
     @property
     def backend(self) -> str:
@@ -74,6 +78,29 @@ class Infer:
         finally:
             for k, v in co.items():
                 store.commit(k, v, pids)
+
+    def _fused_plan(self, pids):
+        """(checkout pids, active mask, row index per pid) for one fused
+        run over `pids`.
+
+        Full live set in slot order -> the canonical capacity-padded
+        path: checkout with ``None`` (padded trees whose shapes survive
+        churn) plus the store's active mask; any other subset -> a dense
+        checkout of exactly those rows under an all-ones mask. Loss
+        vectors coming back from masked programs are indexed with the
+        returned slots."""
+        import jax.numpy as jnp
+        store = self.push_dist.store
+        pids = list(pids)
+        # set comparison, not order: after churn store.pids is in slot
+        # order while callers enumerate in pid order — both mean "the
+        # full live set", and the returned per-pid slots keep the loss
+        # indexing right either way
+        if len(pids) == len(store) and set(pids) == set(store.pids):
+            return None, store.active_mask(), [store.slot_of(p)
+                                               for p in pids]
+        return pids, jnp.ones((len(pids),), jnp.float32), \
+            list(range(len(pids)))
 
     def _compiled_runtime(self):
         """The PD's runtime when it is already the compiled one, else a

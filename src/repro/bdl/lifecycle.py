@@ -1,0 +1,150 @@
+"""Particle lifecycle policies: resample / grow / prune over a live PD.
+
+The paper's pitch — "Push enables easy creation of particles so that an
+input NN can be replicated" — only pays off if churn is cheap AND
+principled. The elastic ParticleStore (DESIGN.md §9) makes clone/kill
+free of recompiles within capacity; this module supplies the *policies*
+that decide which particles live:
+
+  * ``resample``  — SMC-style systematic resampling on per-particle
+    weights (SVGD birth/death, Del Moral-style population maintenance):
+    zero-weight lineages die, high-weight lineages clone with jitter.
+    The live count is preserved, so kills free exactly the slots the
+    clones reuse — capacity, shapes, and every compiled program survive.
+  * ``grow``      — warm-started progressive deep ensembles: new members
+    are jittered clones of the current best member (or fresh inits),
+    then trained on — the ensemble widens without restarting (the
+    trajectory Wilson & Izmailov 2020 motivate for ensembles-as-BMA).
+  * ``prune``     — drop the lowest-weight members (serve fewer, better
+    particles under a latency budget).
+  * ``ensemble_weights`` — the default weight function: softmax(-loss)
+    per live particle from one evaluation batch.
+
+All policies run against ``PushDistribution``'s lifecycle API
+(``p_clone``/``p_kill``) and are backend-agnostic: the NEL path sees
+handlers and optimizer state copied onto the clones; the compiled and
+serving paths see slot writes and a flipped active mask.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def _resolve_pd(obj):
+    return getattr(obj, "push_dist", obj)
+
+
+def ensemble_weights(obj, batch) -> Dict[int, float]:
+    """softmax(-loss) over live particles: one *jitted* loss evaluation
+    per particle (read-only — no optimizer step; all members share one
+    compiled program via the runtime cache), normalized into sampling
+    weights. Lower loss => heavier lineage."""
+    pd = _resolve_pd(obj)
+    losses = {}
+    for pid in pd.particle_ids():
+        p = pd.particles[pid]
+        losses[pid] = float(pd.module._loss_value(p.parameters(), batch))
+    xs = np.asarray(list(losses.values()), np.float64)
+    xs = np.exp(-(xs - xs.min()))
+    xs = xs / xs.sum()
+    return dict(zip(losses, xs))
+
+
+def systematic_counts(weights: Sequence[float], n: int,
+                      rng: Optional[np.random.Generator] = None
+                      ) -> List[int]:
+    """Systematic resampling (one uniform draw, n evenly spaced
+    positions against the weight CDF) -> offspring count per input.
+    Counts sum to n; variance-minimal among single-draw schemes."""
+    w = np.asarray(weights, np.float64)
+    if w.sum() <= 0:
+        raise ValueError("weights must have positive mass")
+    w = w / w.sum()
+    if rng is None:
+        # fresh entropy, NOT a fixed seed: repeated resample rounds must
+        # draw independent offsets or the same rank boundary decides
+        # life/death every round
+        rng = np.random.default_rng()
+    positions = (rng.random() + np.arange(n)) / n
+    cum = np.cumsum(w)
+    cum[-1] = 1.0                       # float-sum guard
+    counts = np.zeros(len(w), np.int64)
+    j = 0
+    for pos in positions:
+        while cum[j] < pos:
+            j += 1
+        counts[j] += 1
+    return counts.tolist()
+
+
+def resample(obj, weights: Optional[Dict[int, float]] = None, *,
+             batch=None, jitter: float = 0.0,
+             rng: Optional[np.random.Generator] = None) -> List[int]:
+    """SMC-style birth/death over the live particle set.
+
+    ``weights`` maps pid -> weight (defaults to ``ensemble_weights`` on
+    ``batch``). Offspring counts come from systematic resampling; a
+    particle with count 0 is killed, count k spawns k-1 jittered clones.
+    Kills run FIRST so every clone lands in a just-freed slot — the live
+    count is preserved and capacity never grows, which is what keeps the
+    whole operation recompile-free. Returns the new live pid list."""
+    pd = _resolve_pd(obj)
+    if weights is None:
+        if batch is None:
+            raise ValueError("pass weights= or batch= to resample")
+        weights = ensemble_weights(pd, batch)
+    pids = list(weights)
+    counts = systematic_counts([weights[p] for p in pids], len(pids), rng)
+    for pid, c in zip(pids, counts):
+        if c == 0:
+            pd.p_kill(pid)
+    for pid, c in zip(pids, counts):
+        for _ in range(c - 1):
+            pd.p_clone(pid, jitter=jitter)
+    return pd.particle_ids()
+
+
+def grow(obj, n_new: int, *, jitter: float = 0.01,
+         weights: Optional[Dict[int, float]] = None, batch=None,
+         optimizer=None) -> List[int]:
+    """Progressive ensemble growth: add ``n_new`` members warm-started
+    as jittered clones of the best current member (by ``weights`` /
+    ``batch``; the first live particle when neither is given). With
+    ``optimizer=`` the new members get fresh optimizer state instead of
+    the source's (cold optimizer, warm params). Growth past capacity
+    doubles the store (one generation bump) — preallocate via
+    ``PushDistribution(capacity=...)`` to avoid it. Returns new pids."""
+    pd = _resolve_pd(obj)
+    if weights is None and batch is not None:
+        weights = ensemble_weights(pd, batch)
+    if weights:
+        src = max(weights, key=weights.get)
+    else:
+        src = pd.particle_ids()[0]
+    new = [pd.p_clone(src, jitter=jitter) for _ in range(n_new)]
+    if optimizer is not None:
+        for pid in new:
+            p = pd.particles[pid]
+            p.optimizer = optimizer
+            p.state["opt_state"] = optimizer.init(p.parameters())
+    return new
+
+
+def prune(obj, keep: int, *, weights: Optional[Dict[int, float]] = None,
+          batch=None) -> List[int]:
+    """Kill all but the ``keep`` heaviest members (lowest-loss under the
+    default weights). Freed slots go on the free list for later clones;
+    nothing recompiles. Returns the surviving pid list."""
+    pd = _resolve_pd(obj)
+    if keep < 1:
+        raise ValueError("keep must be >= 1")
+    if weights is None:
+        if batch is None:
+            raise ValueError("pass weights= or batch= to prune")
+        weights = ensemble_weights(pd, batch)
+    ranked = sorted(weights, key=weights.get, reverse=True)
+    for pid in ranked[keep:]:
+        pd.p_kill(pid)
+    return pd.particle_ids()

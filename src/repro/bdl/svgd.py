@@ -58,24 +58,48 @@ def pairwise_sqdist(theta):
     return jnp.maximum(d2, 0.0)
 
 
-def svgd_force(theta, grads, lengthscale: float, use_kernel: bool = False):
+def svgd_force(theta, grads, lengthscale: float, use_kernel: bool = False,
+               mask=None):
     """theta, grads: (n, D) -> phi: (n, D) descent direction.
 
     phi_i = (1/n) sum_j [ k_ji g_j - k_ji (theta_i - theta_j) / ell^2 ]
-    """
-    if use_kernel:
-        # ops.svgd_force gates Pallas interpret mode on the platform
-        # (compiled on TPU, interpreted elsewhere)
-        from ..kernels import ops as _k
-        return _k.svgd_force(theta, grads, lengthscale)
-    n = theta.shape[0]
-    ell = rbf_lengthscale(theta, lengthscale)
+
+    With a (n,) active ``mask`` (capacity-padded stores, DESIGN.md §9)
+    the sum runs over live slots only — dead rows are where-zeroed on
+    the way in (so even NaN padding cannot leak), excluded from the
+    kernel matrix via the mask outer product, and get phi = 0 out. The
+    result restricted to live rows equals the dense force over just
+    those rows. Masked forces use the jnp oracle (the Pallas kernel is
+    dense-only)."""
+    if mask is None:
+        if use_kernel:
+            # ops.svgd_force gates Pallas interpret mode on the platform
+            # (compiled on TPU, interpreted elsewhere)
+            from ..kernels import ops as _k
+            return _k.svgd_force(theta, grads, lengthscale)
+        ell = rbf_lengthscale(theta, lengthscale)
+        K_w, n_eff = 1.0, theta.shape[0]
+    else:
+        m = mask.astype(theta.dtype)
+        mb = m > 0
+        theta = jnp.where(mb[:, None], theta, 0.0)
+        grads = jnp.where(mb[:, None], grads, 0.0)
+        n_eff = jnp.maximum(jnp.sum(m), 1.0)
+        if lengthscale > 0:
+            ell = jnp.asarray(lengthscale, theta.dtype)
+        else:
+            # median heuristic over live pairs only
+            sq = pairwise_sqdist(theta)
+            pair = mb[:, None] & mb[None, :]
+            med = jnp.nan_to_num(jnp.nanmedian(jnp.where(pair, sq, jnp.nan)))
+            ell = jnp.sqrt(0.5 * med / jnp.log(n_eff + 1.0) + 1e-12)
+        K_w = m[:, None] * m[None, :]   # dead pairs fall out of the kernel
     d2 = pairwise_sqdist(theta) * (1.0 - jnp.eye(theta.shape[0]))
-    K = jnp.exp(-0.5 * d2 / (ell * ell))                       # (n, n), k_ji
+    K = jnp.exp(-0.5 * d2 / (ell * ell)) * K_w                 # (n, n), k_ji
     ksum = K.sum(axis=0)                                       # sum_j k_ji
     attract = K.T @ grads                                      # (n, D)
     repulse = (ksum[:, None] * theta - K.T @ theta) / (ell * ell)
-    return (attract - repulse) / n
+    return (attract - repulse) / n_eff
 
 
 def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
@@ -96,7 +120,7 @@ def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
     vag = jax.vmap(jax.value_and_grad(lambda p, b: loss_fn(p, b)[0]),
                    in_axes=(0, None), spmd_axis_name=spmd)
 
-    def step(stacked_params, batch):
+    def step(stacked_params, batch, mask=None):
         losses, grads = vag(stacked_params, batch)
         theta, unravel = functional.flatten_stacked(stacked_params)
         g, _ = functional.flatten_stacked(grads)
@@ -113,11 +137,16 @@ def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
             theta_all = jax.lax.with_sharding_constraint(theta32, gathered)
             g_all = jax.lax.with_sharding_constraint(g32, gathered)
             phi = svgd_force(theta_all, g_all, lengthscale,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, mask=mask)
             phi = jax.lax.with_sharding_constraint(phi, wide)
         else:
-            phi = svgd_force(theta32, g32, lengthscale, use_kernel=use_kernel)
+            phi = svgd_force(theta32, g32, lengthscale, use_kernel=use_kernel,
+                             mask=mask)
         new_theta = theta - lr * phi.astype(theta.dtype)
+        if mask is not None:
+            # dead slots stay bit-for-bit frozen and report loss 0.0
+            new_theta = jnp.where(mask[:, None] > 0, new_theta, theta)
+            losses = jnp.where(mask > 0, losses, 0.0)
         new_params = jax.vmap(unravel)(new_theta)
         return new_params, losses
 
@@ -142,23 +171,24 @@ def svgd_step_spec(loss_fn, *, lr: float, lengthscale: float = 1.0,
         key=("svgd_step", ident(loss_fn), float(lr), float(lengthscale),
              bool(use_kernel)),
         make=make,
-        in_kinds=("state", "replicated"),
+        in_kinds=("state", "replicated", "replicated"),
         out_kinds=("in:0", "vector"),
         donate=(0,))
 
 
-def compile_svgd_step(loss_fn, placement, stacked, batch, *, lr: float,
-                      lengthscale: float = 1.0, use_kernel: bool = False,
-                      state_token=None):
+def compile_svgd_step(loss_fn, placement, stacked, batch, mask=None, *,
+                      lr: float, lengthscale: float = 1.0,
+                      use_kernel: bool = False, state_token=None):
     """The fused SVGD step against a placement plan, lowered and cached
     by the shared ProgramCache (runtime layer). Pass
-    ``state_token=store.generation()`` to share the entry with programs
-    the Runtime lowered against that store."""
+    ``mask=store.active_mask()`` for the capacity-padded masked program
+    and ``state_token=store.generation()`` to share the entry with
+    programs the Runtime lowered against that store."""
     from ..runtime import global_cache
     spec = svgd_step_spec(loss_fn, lr=lr, lengthscale=lengthscale,
                           use_kernel=use_kernel)
-    return global_cache().program(spec, placement, (stacked, batch),
-                                  state_token)
+    args = (stacked, batch) + (() if mask is None else (mask,))
+    return global_cache().program(spec, placement, args, state_token)
 
 
 # ---------------------------------------------------------------------------
@@ -251,11 +281,12 @@ class SteinVGD(Infer):
         rt = self._compiled_runtime()
         spec = svgd_step_spec(self.module.loss, lr=lr,
                               lengthscale=lengthscale)
+        co_pids, mask, slots = self._fused_plan(pids)
         prog, ls = None, None
-        with self._checked_out(pids, ("params",)) as co:
+        with self._checked_out(co_pids, ("params",)) as co:
             for _ in range(epochs):
                 for batch in dataloader:
                     if prog is None:  # one cache lookup per fused run
-                        prog = rt.program(spec, co["params"], batch)
-                    co["params"], ls = prog(co["params"], batch)
-        return [] if ls is None else [float(l) for l in ls]
+                        prog = rt.program(spec, co["params"], batch, mask)
+                    co["params"], ls = prog(co["params"], batch, mask)
+        return [] if ls is None else [float(ls[s]) for s in slots]

@@ -200,22 +200,25 @@ class MultiSWAG(Infer):
         rt = self._compiled_runtime()
         step_spec = specs.ensemble_step(self.module.loss, optimizer)
         collect_spec = specs.map_step(_swag_collect_fused,
-                                      key=("swag_collect",), n_state=2)
+                                      key=("swag_collect",), n_state=2,
+                                      masked=True)
+        co_pids, mask, slots = self._fused_plan(pids)
         step, collect, ls = None, None, None
-        with self._checked_out(pids, ("params", "opt_state", "swag")) as co:
+        with self._checked_out(co_pids,
+                               ("params", "opt_state", "swag")) as co:
             for e in range(epochs):
                 for batch in dataloader:
                     if step is None:  # one cache lookup per fused run
                         step = rt.program(step_spec, co["params"],
-                                          co["opt_state"], batch)
+                                          co["opt_state"], batch, mask)
                     co["params"], co["opt_state"], ls = step(
-                        co["params"], co["opt_state"], batch)
+                        co["params"], co["opt_state"], batch, mask)
                 if e >= pretrain_epochs:
                     if collect is None:
                         collect = rt.program(collect_spec, co["swag"],
-                                             co["params"])
-                    co["swag"] = collect(co["swag"], co["params"])
-        return [] if ls is None else [float(l) for l in ls]
+                                             co["params"], mask)
+                    co["swag"] = collect(co["swag"], co["params"], mask)
+        return [] if ls is None else [float(ls[s]) for s in slots]
 
     def posterior_predictive(self, *, samples_per_particle: int = 0,
                              rng=None, scale: float = 1.0,
@@ -230,7 +233,9 @@ class MultiSWAG(Infer):
         if samples_per_particle <= 0:
             return super().posterior_predictive(**kw)
         rng = jax.random.PRNGKey(0) if rng is None else rng
-        stacked_swag = self.store.stacked("swag")
+        # dense live rows (not the capacity-padded canonical form): a
+        # padding slot's zero moments must never be sampled as a member
+        stacked_swag = self.store.dense("swag")
         sampled = swag_sample_stacked(stacked_swag, rng,
                                       samples_per_particle, scale,
                                       use_kernel=use_kernel)

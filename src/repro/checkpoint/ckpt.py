@@ -113,21 +113,28 @@ def _rebuild(skel, arrays):
 
 def save_store(ckpt_dir: str, step: int, store,
                keys: Optional[List[str]] = None) -> str:
-    """Write a ParticleStore — every key's canonical stacked pytree, the
-    pid registry, and the placement plan — as <dir>/store_<step>.npz.
+    """Write a ParticleStore — every key's *live* rows (dense, in slot
+    order), the pid/slot registry, capacity + free-slot list + active
+    mask, and the placement plan — as <dir>/store_<step>.npz.
 
-    One round trip: each key is flushed to its stacked form once and the
-    placed leaves stream straight to the file. Keys that cannot stack
-    (e.g. ``grads`` of an un-stepped particle) are skipped when ``keys``
-    is not explicit."""
+    Dense-rows (not the capacity-padded canonical form) is what makes
+    restore elastic: padding rows never hit disk, and the file can be
+    re-placed onto a different capacity or device count. Keys that
+    cannot stack (e.g. ``grads`` of an un-stepped particle) are skipped
+    when ``keys`` is not explicit; keys held by only some particles
+    record exactly which pids hold them."""
     os.makedirs(ckpt_dir, exist_ok=True)
     explicit = keys is not None
     keys = list(keys) if explicit else store.keys()
+    live = list(store.pids)
     arrays: Dict[str, np.ndarray] = {}
     skels: Dict[str, Any] = {}
     for ki, key in enumerate(keys):
+        pids_k = [p for p in live if store.has(key, p)]
         try:
-            st = store.stacked(key)
+            if not pids_k:
+                raise KeyError(key)
+            st = store.dense(key, pids_k)
         except (KeyError, TypeError, ValueError):
             if explicit:
                 raise
@@ -137,10 +144,21 @@ def save_store(ckpt_dir: str, step: int, store,
         for i, leaf in enumerate(flat):
             arrays[f"k{ki}_l{i}"] = np.asarray(leaf)
         skels[key]["_slot"] = ki
+        skels[key]["_pids"] = pids_k
     pl = store.placement
+    # slot layout recorded for forensics/tooling; restore_store re-derives
+    # its own layout from the pids' saved (slot) order, so these three
+    # fields never constrain a restore onto a different capacity
+    live_slots = {p: store.slot_of(p) for p in live}
+    occupied = set(live_slots.values())
     manifest = {
         "step": step,
-        "pids": list(store.pids),
+        "pids": live,
+        "capacity": store.capacity,
+        "slots": {str(p): s for p, s in live_slots.items()},
+        "free": sorted(set(range(store.capacity)) - occupied),
+        "active_mask": [int(s in occupied)
+                        for s in range(store.capacity)],
         "placement": {
             "particle_axis": pl.particle_axis,
             "mode": pl.mode,
@@ -170,13 +188,19 @@ def latest_store_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore_store(ckpt_dir: str, step: Optional[int] = None,
-                  placement=None) -> Tuple[int, Any]:
+                  placement=None, capacity: Optional[int] = None
+                  ) -> Tuple[int, Any]:
     """Rebuild a ready-to-serve ParticleStore from ``save_store`` output.
 
-    Returns (step, store): pids re-registered, every saved key committed
-    as the canonical stacked form, state re-placed on a mesh — so a
+    Returns (step, store): pids re-registered (slot order preserved),
+    every saved key committed back as dense live rows and re-flushed to
+    the capacity-padded canonical form, state re-placed on a mesh — so a
     PredictiveEngine can serve it immediately, no inference replay.
 
+    Elastic restore: ``capacity`` overrides the saved capacity (rounded
+    up to a power of two, never below the live count) — a store saved at
+    capacity 4 can restore at 8 with room to grow, or shrink-fit; the
+    active mask and free-slot list re-derive from the new slot layout.
     ``placement``: an explicit Placement wins; None tries to revive the
     saved plan (a mesh of the saved shape when the local device count
     matches, else single-device)."""
@@ -200,8 +224,11 @@ def restore_store(ckpt_dir: str, step: Optional[int] = None,
                                  tuple(meta["mesh_axes"]))
         placement = Placement(mesh=mesh, particle_axis=meta["particle_axis"],
                               mode=meta["mode"])
-    store = ParticleStore(placement)
-    for pid in manifest["pids"]:
+    pids = manifest["pids"]
+    want_cap = capacity if capacity is not None \
+        else manifest.get("capacity", len(pids))
+    store = ParticleStore(placement, capacity=max(want_cap, len(pids)))
+    for pid in pids:          # saved slot order -> same relative layout
         store.register(pid)
     for key, skel in manifest["keys"].items():
         ki = skel["_slot"]
@@ -211,9 +238,13 @@ def restore_store(ckpt_dir: str, step: Optional[int] = None,
         tree = _rebuild(skel, arrays)
         if tree is None:
             continue
-        if placement.mesh is not None:
-            tree = jax.device_put(tree, placement.shardings(tree))
-        else:
-            tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
-        store.commit(key, tree)
+        tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        pids_k = skel.get("_pids", pids)
+        # per-pid row writes (not a full commit): the saved rows are
+        # dense while the new store's capacity may differ from the saved
+        # one — the flush below pads and places the canonical form
+        for j, p in enumerate(pids_k):
+            store.write(key, p, jax.tree_util.tree_map(
+                lambda x, j=j: x[j], tree))
+        store.stacked(key)
     return step, store

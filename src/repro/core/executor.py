@@ -136,6 +136,32 @@ class Executor:
             self._mailboxes[pid] = _Mailbox(pid)
             self._device_of[pid] = device_idx
 
+    def remove_particle(self, pid: int):
+        """Drop a retired particle's mailbox and device entry. Messages
+        already scheduled keep running (the ready list holds the mailbox
+        reference), but no new work can be submitted for the pid."""
+        dev = self._device_of.pop(pid, None)
+        if dev is None:
+            return
+        q = self._queues[dev]
+        with q.cond:
+            self._mailboxes.pop(pid, None)
+
+    def move_particle(self, pid: int, device_idx: int):
+        """Reassign a particle's mailbox to another device worker. The
+        caller must have drained the runtime first (NodeEventLoop
+        .rebalance does) — a scheduled mailbox cannot be moved."""
+        old = self._device_of.get(pid)
+        if old is None or old == device_idx:
+            self._device_of[pid] = device_idx
+            return
+        with self._queues[old].cond:
+            mb = self._mailboxes.get(pid)
+            if mb is not None and (mb.scheduled or mb.items):
+                raise RuntimeError(
+                    f"cannot move particle {pid}: mailbox busy (drain first)")
+            self._device_of[pid] = device_idx
+
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------

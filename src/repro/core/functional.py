@@ -53,6 +53,36 @@ def flatten_stacked(stacked):
     return flat, unravel
 
 
+# ---------------------------------------------------------------------------
+# active-mask helpers (elastic lifecycle, DESIGN.md §9): stacked trees are
+# capacity-padded; ``mask`` is the store's (capacity,) active mask. Every
+# masked op uses ``where`` (not multiply) so garbage in dead slots — even
+# NaN — can never leak into live results.
+# ---------------------------------------------------------------------------
+
+def expand_mask(mask, ndim: int):
+    """(P,) mask broadcast-shaped against a (P, ...) array of `ndim`."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def masked_select(mask, new_tree, old_tree):
+    """Per-slot select: live slots take `new`, dead slots keep `old`
+    (the frozen padding row) — the update rule of every masked train
+    step, so dead slots never accumulate garbage."""
+    return jax.tree.map(
+        lambda nw, od: jnp.where(expand_mask(mask, nw.ndim) > 0, nw, od),
+        new_tree, old_tree)
+
+
+def masked_mean(tree, mask):
+    """Mean over the leading particle axis restricted to live slots."""
+    live = jnp.maximum(jnp.sum(mask), 1.0)
+    return jax.tree.map(
+        lambda o: jnp.sum(
+            jnp.where(expand_mask(mask, o.ndim) > 0, o, 0.0), axis=0) / live,
+        tree)
+
+
 def ensemble_value_and_grad(loss_fn: Callable,
                             spmd_axis_name: Optional[str] = None):
     """vmap over particles; each particle sees the same batch (deep-ensemble
@@ -68,14 +98,22 @@ def ensemble_value_and_grad(loss_fn: Callable,
 
 def ensemble_step(loss_fn: Callable, optimizer,
                   spmd_axis_name: Optional[str] = None):
-    """One compiled train step for all particles: grads + optimizer update."""
+    """One compiled train step for all particles: grads + optimizer update.
+
+    ``mask=None`` is the dense form; with a (capacity,) active mask, dead
+    slots keep their params/opt state bit-for-bit (frozen padding rows)
+    and report loss 0.0."""
     vag = ensemble_value_and_grad(loss_fn, spmd_axis_name)
 
-    def step(stacked_params, stacked_opt_state, batch):
+    def step(stacked_params, stacked_opt_state, batch, mask=None):
         losses, grads = vag(stacked_params, batch)
         new_p, new_s = jax.vmap(optimizer.update,
                                 spmd_axis_name=spmd_axis_name)(
             stacked_params, grads, stacked_opt_state)
+        if mask is not None:
+            new_p = masked_select(mask, new_p, stacked_params)
+            new_s = masked_select(mask, new_s, stacked_opt_state)
+            losses = jnp.where(mask > 0, losses, 0.0)
         return new_p, new_s, losses
 
     return step
@@ -83,12 +121,15 @@ def ensemble_step(loss_fn: Callable, optimizer,
 
 def ensemble_predict(forward: Callable,
                      spmd_axis_name: Optional[str] = None):
-    """hat f(x) = (1/n) sum_i nn_{theta_i}(x) — one fused program."""
+    """hat f(x) = (1/n) sum_i nn_{theta_i}(x) — one fused program; with a
+    mask, the BMA averages live slots only."""
 
-    def f(stacked_params, batch):
+    def f(stacked_params, batch, mask=None):
         outs = jax.vmap(forward, in_axes=(0, None),
                         spmd_axis_name=spmd_axis_name)(stacked_params, batch)
-        return jax.tree.map(lambda o: jnp.mean(o, axis=0), outs)
+        if mask is None:
+            return jax.tree.map(lambda o: jnp.mean(o, axis=0), outs)
+        return masked_mean(outs, mask)
 
     return f
 
@@ -104,7 +145,8 @@ def ensemble_predict(forward: Callable,
 
 def compile_ensemble_step(loss_fn: Callable, optimizer,
                           placement: Optional[Placement],
-                          stacked, opt_state, batch, *, state_token=None):
+                          stacked, opt_state, batch, mask=None, *,
+                          state_token=None):
     """One ensemble train step against a placement plan.
 
     State shardings come from the placement (particle axis + rules); the
@@ -112,21 +154,26 @@ def compile_ensemble_step(loss_fn: Callable, optimizer,
     params/opt buffers are donated: across a multi-epoch loop the state
     never leaves the device — write-back happens once, at commit time.
 
-    Pass ``state_token=store.generation()`` to share the cache entry
-    with programs the Runtime lowered against that store."""
+    Pass ``mask=store.active_mask()`` to get the capacity-padded masked
+    program the fused epoch loops run, and
+    ``state_token=store.generation()`` to share the cache entry with
+    programs the Runtime lowered against that store."""
     from ..runtime import global_cache, specs
+    args = (stacked, opt_state, batch)
+    if mask is not None:
+        args += (mask,)
     return global_cache().program(specs.ensemble_step(loss_fn, optimizer),
-                                  placement, (stacked, opt_state, batch),
-                                  state_token)
+                                  placement, args, state_token)
 
 
 def compile_ensemble_predict(forward: Callable,
                              placement: Optional[Placement], stacked, batch,
-                             *, state_token=None):
+                             mask=None, *, state_token=None):
     """The fused posterior-predictive program against a placement."""
     from ..runtime import global_cache, specs
+    args = (stacked, batch) + (() if mask is None else (mask,))
     return global_cache().program(specs.ensemble_predict(forward),
-                                  placement, (stacked, batch), state_token)
+                                  placement, args, state_token)
 
 
 def compile_map_step(fn: Callable, placement: Optional[Placement],

@@ -85,6 +85,37 @@ class NodeEventLoop:
         self.executor.add_particle(pid, dev)
         return pid
 
+    def unregister(self, pid: int):
+        """Retire a particle: drop it from the device table and registry,
+        evict it from its device's LRU active set, and remove its
+        executor mailbox. Raises KeyError for unknown/dead pids — dead
+        particles must not leak in ``_particles``/``_active`` forever,
+        and a late ``dispatch`` to one must fail loudly."""
+        dev = self._device_of.pop(pid)      # KeyError for unknown pid
+        self._particles.pop(pid, None)
+        with self._cache_locks[dev]:
+            self._active[dev].pop(pid, None)
+        self.executor.remove_particle(pid)
+
+    def rebalance(self) -> Dict[int, tuple]:
+        """Re-place live particles evenly across devices (round-robin in
+        pid order). Drains in-flight messages first so no mailbox is
+        moved while scheduled; returns {pid: (old_dev, new_dev)} for the
+        particles that moved."""
+        self.drain()
+        moves: Dict[int, tuple] = {}
+        for i, pid in enumerate(sorted(self._particles)):
+            dev = i % len(self.devices)
+            old = self._device_of[pid]
+            if old == dev:
+                continue
+            with self._cache_locks[old]:
+                self._active[old].pop(pid, None)
+            self._device_of[pid] = dev
+            self.executor.move_particle(pid, dev)
+            moves[pid] = (old, dev)
+        return moves
+
     def device_of(self, pid: int) -> jax.Device:
         return self.devices[self._device_of[pid]]
 
@@ -132,6 +163,10 @@ class NodeEventLoop:
     def dispatch(self, pid: int, fn: Callable, *args,
                  needs_device: bool = False, lightweight: bool = False,
                  **kwargs) -> PFuture:
+        if pid not in self._particles:
+            # a dead pid must fail loudly, not silently queue (the
+            # lightweight pool would otherwise accept it forever)
+            raise KeyError(f"particle {pid} is not registered")
         self._bump("dispatches")
         return self.executor.submit(pid, fn, args, kwargs,
                                     needs_device=needs_device,

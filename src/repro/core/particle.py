@@ -52,6 +52,7 @@ class ParticleModule:
             lambda pp: loss(pp, b)[0])(p)
         self._vag_prog = None
         self._fwd_prog = None
+        self._loss_prog = None
 
     def _value_and_grad(self, params, batch):
         if self._vag_prog is None:
@@ -70,11 +71,23 @@ class ParticleModule:
                 self.forward, (params, batch))
         return self._fwd_prog(params, batch)
 
+    def _loss_value(self, params, batch):
+        """Jitted scalar loss (no grads) through the shared cache — one
+        compiled program for all particles; lifecycle weight policies
+        evaluate this per member without retracing the forward."""
+        if self._loss_prog is None:
+            from ..runtime import ident, jit_program
+            self._loss_prog = jit_program(
+                "nel_loss", ("nel_loss", ident(self.loss)),
+                lambda p, b: self.loss(p, b)[0], (params, batch))
+        return self._loss_prog(params, batch)
+
 
 class Particle:
     def __init__(self, pid: int, nel, module: ParticleModule, params,
                  optimizer=None, opt_state=None, state: Optional[dict] = None,
-                 store: Optional[ParticleStore] = None):
+                 store: Optional[ParticleStore] = None,
+                 write_state: bool = True):
         self.pid = pid
         self.nel = nel
         self.module = module
@@ -82,16 +95,19 @@ class Particle:
         # All per-particle state lives in the (possibly shared) ParticleStore;
         # ``state`` is this particle's mapping view of it (store.py). A
         # standalone particle gets a private store so the API is unchanged.
+        # ``write_state=False`` attaches to state the caller already put
+        # in the store (p_clone's fused slot copy).
         if store is None:
             store = ParticleStore()
             store.register(pid)
         self.store = store
         self.state: StoreState = StoreState(store, pid)
-        for k, v in (state or {}).items():
-            self.state[k] = v
-        self.state["params"] = params
-        self.state["opt_state"] = opt_state
-        self.state["grads"] = None
+        if write_state:
+            for k, v in (state or {}).items():
+                self.state[k] = v
+            self.state["params"] = params
+            self.state["opt_state"] = opt_state
+            self.state["grads"] = None
         self.receive: Dict[str, Callable] = {}
 
     # -- local state access ------------------------------------------------

@@ -37,6 +37,7 @@ buffers, and commits once per fused run.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -53,7 +54,8 @@ class PushDistribution:
                  cache_size: int = 4, view_size: int = 4, seed: int = 0,
                  offload: bool = False, backend: str = "nel",
                  max_pending: int = 4096,
-                 placement: Optional[Placement] = None):
+                 placement: Optional[Placement] = None,
+                 capacity: int = 0):
         if backend not in BACKENDS:
             # validate BEFORE spawning executor threads: a bad backend
             # must not leak a running NodeEventLoop (nothing would ever
@@ -66,7 +68,10 @@ class PushDistribution:
         self.view_size = view_size
         self._rng = jax.random.PRNGKey(seed)
         self.particles: Dict[int, Particle] = {}
-        self.store = ParticleStore(placement)
+        # capacity preallocates store slots (power-of-two) so the first
+        # `capacity` p_create calls never bump the compile generation
+        self.store = ParticleStore(placement, capacity=capacity)
+        self.lifecycle = {"clones": 0, "kills": 0, "rebalances": 0}
         self.runtime = make_runtime(backend, self)
 
     @property
@@ -99,6 +104,60 @@ class PushDistribution:
         self.particles[pid] = p
         return pid
 
+    # -- elastic lifecycle (DESIGN.md §9) ------------------------------------
+    def p_clone(self, pid: int, jitter: float = 0.0, *,
+                device: Optional[int] = None) -> int:
+        """Replicate a live particle into a free slot: params (plus
+        optional Gaussian ``jitter``), optimizer state, message handlers
+        and every other state key are copied. Within capacity this is a
+        pure slot write — no stacked shape changes, no ``generation()``
+        bump, zero recompiles of any train/serve/NEL program."""
+        src = self.particles[pid]
+        new_pid = self.nel.register(None, device=device)
+        self.store.register(new_pid)
+        rng = self._next_rng() if jitter else None
+        # params FIRST: the slot activates in the serving mask when its
+        # first key lands (store._mark_present), and that key must be the
+        # one serving reads — keys_for returns set order otherwise
+        keys = sorted(self.store.keys_for(pid), key=lambda k: k != "params")
+        for key in keys:
+            # params: one fused slot-to-slot copy (jitter traced in), so
+            # the serving-hot key stays canonical with no pending flush;
+            # cold keys (opt state, grads): lazy row copies that flush
+            # whenever training next needs them
+            hot = key == "params"
+            self.store.clone_slot(key, pid, new_pid,
+                                  jitter=jitter if hot else 0.0,
+                                  rng=rng if hot else None,
+                                  prefer_row=not hot)
+        p = Particle(new_pid, self.nel, self.module, None, src.optimizer,
+                     store=self.store, write_state=False)
+        p.receive = dict(src.receive)
+        self.nel._particles[new_pid] = p
+        self.particles[new_pid] = p
+        self.lifecycle["clones"] += 1
+        return new_pid
+
+    def p_kill(self, pid: int):
+        """Retire a particle: its slot goes on the store's free list (the
+        active mask flips to 0 there) and the NEL drops its mailbox and
+        active-set entry. In-flight fused calls finish against the mask
+        they read; the next request sees the shrunken ensemble. Within
+        capacity this never changes ``generation()`` — no recompiles."""
+        self.particles.pop(pid)     # KeyError for unknown/dead pid
+        self.nel.unregister(pid)
+        self.store.unregister(pid)
+        self.lifecycle["kills"] += 1
+
+    def p_rebalance(self) -> Dict[int, Any]:
+        """Re-place live particles evenly across NEL devices (drains
+        first) and re-place the store's stacked state against its
+        placement plan. Returns {pid: (old_dev, new_dev)} moves."""
+        moves = self.nel.rebalance()
+        self.store.rebalance()
+        self.lifecycle["rebalances"] += 1
+        return moves
+
     def p_launch(self, pid: int, msg: str, *args, **kwargs) -> PFuture:
         p = self.particles[pid]
         if msg not in p.receive:
@@ -115,16 +174,24 @@ class PushDistribution:
     def particle_ids(self) -> List[int]:
         return self.nel.particle_ids()
 
-    # -- compiled-backend bridge (stacked particle axis) --------------------
+    # -- compiled-backend bridge (DEPRECATED thin delegates) -----------------
     def p_stack(self, pids: Sequence[int], key: str = "params"):
-        """Canonical stacked form of a per-particle state entry (leading
-        particle axis, placed on the PD's mesh). Delegates to the store."""
+        """Deprecated since the capacity-padded store: use
+        ``pd.store.stacked(key)`` (+ ``active_mask()``) for the canonical
+        padded form or ``pd.store.dense(key, pids)`` for live rows."""
+        warnings.warn(
+            "PushDistribution.p_stack is deprecated; use store.stacked/"
+            "store.dense with the lifecycle API instead",
+            DeprecationWarning, stacklevel=2)
         return self.store.stacked(key, pids)
 
     def p_unstack(self, pids: Sequence[int], stacked, key: str = "params"):
-        """Commit a fused result as the canonical state (index i -> pid_i);
-        per-particle views re-derive lazily, so views/messaging/prediction
-        see exactly what the NEL path would."""
+        """Deprecated: commit through ``pd.store.commit(key, stacked,
+        pids)`` — index i of `stacked` becomes pids[i]'s state."""
+        warnings.warn(
+            "PushDistribution.p_unstack is deprecated; use store.commit "
+            "with the lifecycle API instead",
+            DeprecationWarning, stacklevel=2)
         self.store.commit(key, stacked, pids)
 
     # -- ensemble-style prediction over all particles -----------------------

@@ -80,6 +80,8 @@ class _BaseRuntime:
             "dispatch": dict(self.pd.nel.stats),
             "store": self.pd.store.snapshot_stats(),
             "program_cache": self.cache.snapshot_stats(),
+            "lifecycle": {**self.pd.store.lifecycle_stats(),
+                          **getattr(self.pd, "lifecycle", {})},
         }
 
 
@@ -114,9 +116,14 @@ class CompiledRuntime(_BaseRuntime):
         pids = pd.particle_ids()
         if not pids:
             return NelRuntime.predict(self, pd, batch)
-        stacked = pd.store.stacked("params")
+        # capacity-padded stacked params + active mask, read as ONE
+        # atomic store snapshot (a mask bit never goes live before its
+        # slot's data lands): the fused BMA averages live slots only,
+        # and clone/kill churn within capacity reuses this exact
+        # program (shapes and generation unchanged)
+        _, mask, stacked = pd.store.snapshot("params")
         spec = specs.ensemble_predict(pd.module.forward)
-        return self.run(spec, stacked, batch)
+        return self.run(spec, stacked, batch, mask)
 
 
 def make_runtime(backend: str, pd,

@@ -5,12 +5,20 @@ Algorithm- and workload-specific specs live next to their math
 here cover the shapes every ensemble-family algorithm reuses. All of them
 are *thin*: the functional bodies stay in ``core/functional.py`` — a spec
 only names the function, the argument roles, and the donation plan.
+
+Elastic lifecycle (DESIGN.md §9): every builder optionally threads the
+store's ``active_mask()`` as one extra argument after the dense ones —
+"replicated" for whole-mask reductions (BMA means, losses), "vector" for
+per-slot gating vmapped alongside the state. The mask's *content* is a
+runtime value, never part of the cache key, so clone/kill churn within
+capacity reuses the same compiled program.
 """
 from __future__ import annotations
 
 from typing import Callable, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from ..core import functional
 from .program import ProgramSpec, ident
@@ -19,35 +27,59 @@ from .program import ProgramSpec, ident
 def ensemble_step(loss_fn: Callable, optimizer) -> ProgramSpec:
     """One train step for all particles: vmapped value_and_grad +
     optimizer update. State donated — a multi-epoch loop reuses the
-    buffers in place and never touches the host."""
+    buffers in place and never touches the host. Call with or without a
+    trailing active mask (the functional body defaults it to dense)."""
     return ProgramSpec(
         name="ensemble_step",
         key=("ensemble_step", ident(loss_fn), ident(optimizer)),
         make=lambda ctx: functional.ensemble_step(loss_fn, optimizer,
                                                   ctx.spmd_axis),
-        in_kinds=("state", "state", "replicated"),
+        in_kinds=("state", "state", "replicated", "replicated"),
         out_kinds=("in:0", "in:1", "vector"),
         donate=(0, 1))
 
 
 def ensemble_predict(forward: Callable) -> ProgramSpec:
-    """hat f(x) = (1/n) sum_i nn_{theta_i}(x) — one fused program."""
+    """hat f(x) = (1/n) sum_i nn_{theta_i}(x) — one fused program
+    (mask-weighted over live slots when called with a trailing mask)."""
     return ProgramSpec(
         name="ensemble_predict",
         key=("ensemble_predict", ident(forward)),
         make=lambda ctx: functional.ensemble_predict(forward, ctx.spmd_axis),
-        in_kinds=("state", "replicated"))
+        in_kinds=("state", "replicated", "replicated"))
 
 
 def map_step(fn: Callable, *, key: Tuple, n_state: int = 1,
-             donate: Tuple[int, ...] = (0,)) -> ProgramSpec:
+             donate: Tuple[int, ...] = (0,), masked: bool = False
+             ) -> ProgramSpec:
     """A per-particle map vmapped over `n_state` stacked trees (SWAG
     moment collection), sharded and donated like the train step. ``key``
-    must be stable across calls (use ``ident`` on long-lived functions)."""
+    must be stable across calls (use ``ident`` on long-lived functions).
+
+    ``masked=True`` appends a (capacity,) active-mask argument, vmapped
+    per row: dead slots keep their first state tree bit-for-bit instead
+    of taking ``fn``'s output."""
+    if not masked:
+        return ProgramSpec(
+            name="map_step",
+            key=("map_step",) + tuple(key),
+            make=lambda ctx: jax.vmap(fn, spmd_axis_name=ctx.spmd_axis),
+            in_kinds=("state",) * n_state,
+            out_kinds=("in:0",),
+            donate=donate)
+
+    def row(*args):
+        *rows, m = args
+        return jax.tree.map(lambda nw, od: jnp.where(m > 0, nw, od),
+                            fn(*rows), rows[0])
+
+    # the mask rides in replicated (that is how the store places its
+    # cached device mask) and is split per row by the vmap itself
     return ProgramSpec(
         name="map_step",
-        key=("map_step",) + tuple(key),
-        make=lambda ctx: jax.vmap(fn, spmd_axis_name=ctx.spmd_axis),
-        in_kinds=("state",) * n_state,
+        key=("map_step", "masked") + tuple(key),
+        make=lambda ctx: jax.vmap(row, in_axes=(0,) * n_state + (0,),
+                                  spmd_axis_name=ctx.spmd_axis),
+        in_kinds=("state",) * n_state + ("replicated",),
         out_kinds=("in:0",),
         donate=donate)

@@ -24,6 +24,14 @@ second engine over the same store+module compiles NOTHING, and training
 commits (which bump the version but not the generation) never invalidate
 serving programs.
 
+Elastic stores (DESIGN.md §9) serve through the same programs under
+clone/kill churn: the stacked tree is capacity-padded (shapes are
+churn-invariant), the store's active mask is re-read per request and
+threaded in as a replicated runtime value, and every particle-axis head
+is mask-weighted over live slots — so p_clone/p_kill between requests
+change WHAT is served, never what is compiled, and in-flight requests
+drain against the mask and buffers they already read.
+
 Two program shapes:
 
   predict(batch)        stateless BMA forward     forward(params, batch)
@@ -37,6 +45,8 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from ..core.store import ParticleStore, Placement
 from ..runtime import (ProgramCache, ProgramSpec, abstract_key, bucket_size,
@@ -48,9 +58,13 @@ def _leading(tree) -> int:
     return jax.tree.leaves(tree)[0].shape[0]
 
 
-def _bma_reduce_heads(outs, placement: Placement, n: int, kind: str):
+def _bma_reduce_heads(outs, placement: Placement, n: int, kind: str,
+                      mask=None):
     """Heads from stacked member outputs, with the particle-axis
-    reduction expressed as sharding-constraint transitions."""
+    reduction expressed as sharding-constraint transitions. ``mask`` is
+    the (capacity,) active mask of an elastic store — the heads weight
+    live slots only (replicated alongside the gathered outputs, so the
+    masked reduction is local to every device)."""
     if placement.mesh is not None:
         row_sh = placement.vector(n)           # P(particle_axis), rest ∅
         outs = jax.lax.with_sharding_constraint(outs, row_sh)
@@ -58,7 +72,7 @@ def _bma_reduce_heads(outs, placement: Placement, n: int, kind: str):
         # gets all members' outputs, then reduces locally (replicated)
         outs = jax.lax.with_sharding_constraint(
             outs, placement.replicated(outs))
-    return uncertainty.predictive_heads(outs, kind), outs
+    return uncertainty.predictive_heads(outs, kind, mask), outs
 
 
 class PredictiveEngine:
@@ -101,6 +115,8 @@ class PredictiveEngine:
         if params is not None and placement.mesh is not None:
             self._static_params = jax.device_put(
                 params, placement.shardings(params))
+        self._static_mask: Any = None
+        self._live_idx: Any = None      # (mask object, live row indices)
         self._params_version: Any = None
         self._params_cache: Any = None
         # hot-path memos: the abstract key of the (large) stacked-params
@@ -125,14 +141,53 @@ class PredictiveEngine:
             return self._static_params
         v = self.store.version(self.key)
         if v != self._params_version:
-            self._params_cache = self.store.stacked(self.key)
-            self._params_version = v
-            self._params_key = abstract_key(self._params_cache)
-            self.stats["param_refreshes"] += 1
+            self._refresh_params(v, self.store.stacked(self.key))
         return self._params_cache
+
+    def _refresh_params(self, version, stacked):
+        """Install a freshly flushed stacked tree in the memo. Shapes are
+        capacity-padded, so the abstract key can only change with the
+        generation — content edits (incl. clone/kill churn) refresh the
+        tree reference without re-walking it."""
+        self._params_cache = stacked
+        if self._params_version is None \
+                or version[0] != self._params_version[0]:
+            self._params_key = abstract_key(stacked)
+        self._params_version = version
+        self.stats["param_refreshes"] += 1
+
+    def active_mask(self):
+        """The store's (capacity,) live-slot mask, re-read per request —
+        THIS is what lets clone/kill churn between requests take effect
+        with zero recompiles (mask content is a runtime value, not part
+        of any cache key). Static-params engines serve a dense all-ones
+        mask."""
+        if self.store is not None:
+            return self.store.active_mask()
+        if self._static_mask is None:
+            self._static_mask = jnp.ones((_leading(self._static_params),),
+                                         jnp.float32)
+        return self._static_mask
+
+    def _mask_and_params(self):
+        """Consistent (mask, stacked params) pair under concurrent
+        churn: one atomic ``store.snapshot`` under the store lock, so a
+        mask bit can never go live before its slot's data landed and
+        capacity growth can never split the pair. The engine-side memos
+        (params reference, abstract key) refresh off the snapshot's
+        version exactly as ``stacked_params`` would."""
+        if self.store is None:
+            return self.active_mask(), self.stacked_params()
+        v, mask, stacked = self.store.snapshot(self.key)
+        if v != self._params_version:
+            self._refresh_params(v, stacked)
+        return mask, self._params_cache
 
     @property
     def num_particles(self) -> int:
+        """Leading member axis of the served stacked tree — the store's
+        capacity for elastic stores (use ``store.live_count()`` for the
+        live member count)."""
         return _leading(self.stacked_params())
 
     def _state_token(self):
@@ -149,12 +204,13 @@ class PredictiveEngine:
         fwd, kind = self.forward, self.kind
 
         def make(ctx):
-            def fused(stacked_params, b):
+            def fused(stacked_params, b, mask):
                 outs = jax.vmap(fwd, in_axes=(0, None),
                                 spmd_axis_name=ctx.spmd_axis)(
                     stacked_params, b)
                 heads, outs_rep = _bma_reduce_heads(outs, ctx.placement,
-                                                    ctx.num_particles, kind)
+                                                    ctx.num_particles, kind,
+                                                    mask)
                 return (heads, outs_rep) if members else heads
 
             return fused
@@ -163,7 +219,7 @@ class PredictiveEngine:
             name="bma_predict",
             key=("bma_predict", ident(fwd), kind, members),
             make=make,
-            in_kinds=("state", "replicated"),
+            in_kinds=("state", "replicated", "replicated"),
             out_kinds=("replicated",))
         self._spec_memo[("predict", members)] = spec
         return spec
@@ -175,12 +231,12 @@ class PredictiveEngine:
         fwd, kind = self.forward, self.kind
 
         def make(ctx):
-            def fused(stacked_params, st, b):
+            def fused(stacked_params, st, b, mask):
                 outs, new_st = jax.vmap(fwd, in_axes=(0, 0, None),
                                         spmd_axis_name=ctx.spmd_axis)(
                     stacked_params, st, b)
                 heads, _ = _bma_reduce_heads(outs, ctx.placement,
-                                             ctx.num_particles, kind)
+                                             ctx.num_particles, kind, mask)
                 return heads, new_st
 
             return fused
@@ -189,7 +245,7 @@ class PredictiveEngine:
             name="bma_step",
             key=("bma_step", ident(fwd), kind),
             make=make,
-            in_kinds=("state", "rows", "replicated"),
+            in_kinds=("state", "rows", "replicated", "replicated"),
             out_kinds=("replicated", "in:1"))
         self._spec_memo["step"] = spec
         return spec
@@ -214,15 +270,25 @@ class PredictiveEngine:
         if self.stateful:
             raise RuntimeError("stateful engine: use step(state, batch)")
         self.stats["calls"] += 1
-        stacked = self.stacked_params()
+        mask, stacked = self._mask_and_params()
         m = _leading(batch)
         padded = pad_rows(batch, bucket_size(m))
-        prog = self._program(self._predict_spec(members), (stacked, padded))
-        out = prog(stacked, padded)
+        prog = self._program(self._predict_spec(members),
+                             (stacked, padded, mask))
+        out = prog(stacked, padded, mask)
         heads, outs = out if members else (out, None)
         heads = jax.tree.map(lambda a: a[:m], heads)
         if members:
-            return heads, jax.tree.map(lambda a: a[:, :m], outs)
+            # members keeps its pre-elastic contract: exactly the live
+            # rows, slot order (a host-side gather on the replicated
+            # outputs — per-request live counts never touch the program).
+            # Live indices memoized on the mask object, which the store
+            # caches between lifecycle events: no per-request device sync
+            if self._live_idx is None or self._live_idx[0] is not mask:
+                self._live_idx = (mask,
+                                  np.flatnonzero(np.asarray(mask) > 0))
+            live = self._live_idx[1]
+            return heads, jax.tree.map(lambda a: a[live, :m], outs)
         return heads
 
     def step(self, state, batch):
@@ -232,9 +298,9 @@ class PredictiveEngine:
         if not self.stateful:
             raise RuntimeError("stateless engine: use predict(batch)")
         self.stats["calls"] += 1
-        stacked = self.stacked_params()
-        prog = self._program(self._step_spec(), (stacked, state, batch))
-        return prog(stacked, state, batch)
+        mask, stacked = self._mask_and_params()
+        prog = self._program(self._step_spec(), (stacked, state, batch, mask))
+        return prog(stacked, state, batch, mask)
 
     def init_state(self, make_state: Callable):
         """Build stacked per-particle serving state: ``make_state(row)``

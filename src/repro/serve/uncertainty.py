@@ -65,32 +65,63 @@ def particle_variance(member_probs):
     return jnp.mean(jnp.var(member_probs, axis=0), axis=-1)
 
 
-def predictive_heads(member_outputs, kind: str = "classify"):
+def _mask_stats(x, mask):
+    """Masked mean/variance over the leading particle axis: dead rows are
+    where-zeroed (NaN in a padding slot can never leak) and the divisor
+    is the live count. With an all-ones mask this reduces to
+    ``jnp.mean``/``jnp.var`` up to float associativity. The mean is
+    ``functional.masked_mean``; the variance reuses the same masking."""
+    from ..core.functional import expand_mask, masked_mean
+    m = expand_mask(mask, x.ndim) > 0
+    live = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    mean = masked_mean(x, mask)
+    var = jnp.sum(jnp.where(m, (x - mean) ** 2, 0.0), axis=0) / live
+    return mean, var
+
+
+def predictive_heads(member_outputs, kind: str = "classify", mask=None):
     """All heads from one stacked member-output tensor (leading axis P).
 
     Returns a dict of arrays with leading batch axis B — the engine's
     fused program returns exactly this dict, so adding a head here makes
     it free at serve time for every model.
+
+    ``mask`` is the store's (P,) active mask for capacity-padded member
+    axes (DESIGN.md §9): every particle reduction becomes mask-weighted
+    over live slots, exactly matching the dense heads computed on just
+    those members.
     """
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
     x = member_outputs.astype(jnp.float32)
     if kind == "classify":
-        # composed from the standalone heads above (XLA CSEs the shared
-        # softmax across them — one fused program either way)
-        mean = bma_mean_probs(x)                        # (B, C)
+        probs = jax.nn.softmax(x, axis=-1)              # (P, B, C)
+        logp = jax.nn.log_softmax(x, axis=-1)
+        member_ent = -jnp.sum(probs * logp, axis=-1)    # (P, B)
+        if mask is None:
+            # composed from the standalone heads above (XLA CSEs the
+            # shared softmax across them — one fused program either way)
+            mean = bma_mean_probs(x)                    # (B, C)
+            var = jnp.mean(jnp.var(probs, axis=0), axis=-1)
+            exp_ent = jnp.mean(member_ent, axis=0)
+        else:
+            mean, pvar = _mask_stats(probs, mask)
+            var = jnp.mean(pvar, axis=-1)
+            exp_ent, _ = _mask_stats(member_ent, mask)
         ent = predictive_entropy(mean)
-        exp_ent = expected_entropy(x)
         return {
             "mean": mean,
-            "variance": particle_variance(jax.nn.softmax(x, axis=-1)),
+            "variance": var,
             "entropy": ent,
             "expected_entropy": exp_ent,
             "mutual_info": jnp.maximum(ent - exp_ent, 0.0),
         }
     # regression: members are point predictions (P, B, ...)
-    mean = jnp.mean(x, axis=0)
-    var = jnp.var(x, axis=0)
+    if mask is None:
+        mean = jnp.mean(x, axis=0)
+        var = jnp.var(x, axis=0)
+    else:
+        mean, var = _mask_stats(x, mask)
     reduce_axes = tuple(range(1, mean.ndim))            # all but batch
     var_scalar = (jnp.mean(var, axis=reduce_axes) if reduce_axes
                   else var)

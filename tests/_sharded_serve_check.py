@@ -158,8 +158,41 @@ def main():
         assert spec and spec[0] == "data", \
             f"serving state not particle-sharded: {spec}"
 
+        # lifecycle churn under the mesh: clone+kill between requests
+        # must cold-compile NOTHING (capacity, shapes and generation are
+        # churn-invariant) while the served BMA tracks the live set and
+        # params stay sharded over all 4 devices
+        pd = de.push_dist
+        eng2 = PredictiveEngine(pd.module.forward, store=de.store,
+                                kind="regress")
+        eng2.predict(probe)                       # shared-cache warm hit
+        cold0 = global_cache().snapshot_stats()["cold_compiles"]
+        gen0 = de.store.generation()
+        puts0 = de.store.snapshot_stats()["device_puts"]
+        for _ in range(3):
+            victim = pd.particle_ids()[0]
+            pd.p_kill(victim)
+            pd.p_clone(pd.particle_ids()[0], jitter=0.01)
+            heads2 = eng2.predict(probe)
+            live = pd.particle_ids()
+            ref2 = np.mean([np.asarray(x @ pd.p_params(p)["w"]
+                                       + pd.p_params(p)["b"])
+                            for p in live], 0)
+            cerr = float(np.abs(np.asarray(heads2["mean"]) - ref2).max())
+            assert cerr < 1e-5, f"churned BMA vs live reference: {cerr}"
+        assert de.store.generation() == gen0, "churn bumped the generation"
+        assert global_cache().snapshot_stats()["cold_compiles"] == cold0, \
+            "clone/kill churn cold-compiled under the mesh"
+        assert de.store.snapshot_stats()["device_puts"] == puts0, \
+            "churn re-placed the stacked state"
+        assert de.store.capacity == N_PARTICLES
+        check_sharded(de.store, "params")
+        lc = pd.stats()["lifecycle"]
+        assert lc["clones"] == 3 and lc["kills"] == 3 and lc["live"] == 4
+
     print(f"parity {err:.2e}, stacked state untouched across requests "
-          f"({N_DEV} devices), heads replicated, stateful state sharded")
+          f"({N_DEV} devices), heads replicated, stateful state sharded, "
+          "churn cold-compiled nothing")
     print("OK")
 
 

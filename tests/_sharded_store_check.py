@@ -108,21 +108,22 @@ def main():
                     from repro.runtime import global_cache
                     hits0 = global_cache().snapshot_stats()["hits"]
                     tok = a.store.generation()
+                    mask = a.store.active_mask()
                     st = a.store.checkout("params", pids)
                     if "optimizer" in kw:
                         ost = a.store.checkout("opt_state", pids)
                         step = functional.compile_ensemble_step(
                             a.module.loss, kw["optimizer"], placement,
-                            st, ost, batches[0], state_token=tok)
-                        np_, no_, _ = step(st, ost, batches[0])
+                            st, ost, batches[0], mask, state_token=tok)
+                        np_, no_, _ = step(st, ost, batches[0], mask)
                         assert st["w"].is_deleted(), "params not donated"
                         a.store.commit("opt_state", no_, pids)
                     else:
                         step = compile_svgd_step(
-                            a.module.loss, placement, st, batches[0],
+                            a.module.loss, placement, st, batches[0], mask,
                             lr=kw["lr"], lengthscale=kw["lengthscale"],
                             state_token=tok)
-                        np_, _ = step(st, batches[0])
+                        np_, _ = step(st, batches[0], mask)
                         assert st["w"].is_deleted(), "params not donated"
                     a.store.commit("params", np_, pids)
                     assert global_cache().snapshot_stats()["hits"] \

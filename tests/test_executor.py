@@ -244,6 +244,20 @@ def test_nel_dispatch_uses_persistent_loops():
         st = pd.nel.executor.stats()
         assert st["dispatched"] >= 84
         assert st["threads"] == pd.nel.executor.num_threads
+        # the unified stats surface carries the lifecycle section too
+        full = pd.stats()
+        lc = full["lifecycle"]
+        assert lc["capacity"] == 4 and lc["live"] == 4
+        assert lc["free_slots"] == 0
+        assert lc["clones"] == 0 and lc["kills"] == 0
+        assert lc["rebalances"] == 0
+        assert lc["mask_invalidations"] >= 4     # one per registration
+        pd.p_kill(pids[-1])
+        pd.p_clone(pids[0])
+        lc2 = pd.stats()["lifecycle"]
+        assert lc2["kills"] == 1 and lc2["clones"] == 1
+        assert lc2["live"] == 4 and lc2["capacity"] == 4
+        assert lc2["generation"] == lc["generation"]   # churn is free
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,464 @@
+"""Elastic particle lifecycle (DESIGN.md §9): capacity-padded store,
+clone/kill/rebalance, masked fused-path parity against dense references,
+zero-recompile churn, and elastic checkpoint restore.
+
+The acceptance bar this file carries: within-capacity p_clone/p_kill
+cause ZERO ProgramCache cold compiles (generation and shapes are both
+churn-invariant), masked BMA/SVGD match dense per-particle references to
+< 1e-5, and capacity growth — the one shape-changing lifecycle event —
+bumps the generation exactly once per doubling.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bdl import DeepEnsemble, lifecycle
+from repro.bdl.svgd import fused_svgd_step, svgd_force
+from repro.core import ParticleModule, ParticleStore, PushDistribution
+from repro.optim import sgd
+from repro.runtime import global_cache
+from repro.serve import PredictiveEngine
+from repro.serve.uncertainty import predictive_heads
+
+
+def _module():
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (3, 4)) * 0.5,
+                "b": jax.random.normal(k2, (4,)) * 0.1}
+
+    def loss(p, b):
+        return jnp.mean((b[0] @ p["w"] + p["b"] - b[1]) ** 2), {}
+
+    def fwd(p, b):
+        return b[0] @ p["w"] + p["b"]
+
+    return ParticleModule(init, loss, fwd)
+
+
+def _batch(m=8, seed=3):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, 3))
+    return (x, x @ jnp.ones((3, 4)))
+
+
+def _cold():
+    return global_cache().snapshot_stats()["cold_compiles"]
+
+
+# ---------------------------------------------------------------------------
+# clone / kill semantics
+# ---------------------------------------------------------------------------
+
+def test_clone_identical_without_jitter_and_perturbed_with():
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        src = pd.p_create(sgd(0.1))
+        twin = pd.p_clone(src)                     # jitter=0: exact copy
+        assert twin != src
+        a, b = pd.p_params(src), pd.p_params(twin)
+        assert all(bool(jnp.array_equal(u, v)) for u, v in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        jit = pd.p_clone(src, jitter=0.05)
+        c = pd.p_params(jit)
+        diff = float(jnp.abs(c["w"] - a["w"]).max())
+        assert 0.0 < diff < 1.0                    # perturbed, but nearby
+        # handlers and optimizer travel with the clone
+        assert pd.particles[twin].optimizer is pd.particles[src].optimizer
+        assert pd.lifecycle["clones"] == 2
+
+
+def test_clone_copies_extra_state_keys():
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        src = pd.p_create(sgd(0.1))
+        pd.particles[src].state["swag"] = {"n": jnp.ones(())}
+        twin = pd.p_clone(src)
+        assert float(pd.particles[twin].state["swag"]["n"]) == 1.0
+
+
+def test_kill_then_create_reuses_slot_without_generation_bump():
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        store = pd.store
+        gen = store.generation()
+        slot = store.slot_of(pids[1])
+        pd.p_kill(pids[1])
+        assert store.live_count() == 3 and store.free_slots() == 1
+        assert np.asarray(store.active_mask())[slot] == 0.0
+        fresh = pd.p_create(sgd(0.1))
+        assert store.slot_of(fresh) == slot        # freed slot reused
+        assert store.generation() == gen           # no shape change
+        assert store.capacity == 4
+        # dead pid is really dead: state, messaging, NEL
+        with pytest.raises(KeyError):
+            store.read("params", pids[1])
+        with pytest.raises(KeyError):
+            pd.nel.dispatch(pids[1], lambda: None)
+        assert pids[1] not in pd.nel._particles
+        assert pids[1] not in pd.nel._device_of
+
+
+def test_kill_cleans_nel_active_set():
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(2)]
+        b = _batch()
+        pd.p_wait([pd.particles[p].step(b) for p in pids])   # make resident
+        assert pids[0] in pd.nel._active[0]
+        pd.p_kill(pids[0])
+        assert pids[0] not in pd.nel._active[0]
+        assert pd.lifecycle["kills"] == 1
+
+
+def test_capacity_growth_bumps_generation_once_per_doubling():
+    with PushDistribution(_module(), num_devices=1) as pd:
+        gens = []
+        for _ in range(5):
+            pd.p_create(sgd(0.1))
+            gens.append(pd.store.generation())
+        # capacities after each create: 1, 2, 4, 4, 8 — growth (and the
+        # generation bump) happens at creates 1, 2, 3 and 5 only
+        assert pd.store.capacity == 8
+        assert gens[3] == gens[2]      # 4th create fit capacity 4
+        assert gens[4] > gens[3]       # 5th forced the doubling
+
+
+def test_rebalance_moves_particles_evenly():
+    with PushDistribution(_module(), num_devices=1, capacity=8) as pd:
+        pids = [pd.p_create(sgd(0.1), device=0) for _ in range(4)]
+        moves = pd.p_rebalance()       # single device: nothing to move
+        assert moves == {}
+        assert pd.lifecycle["rebalances"] == 1
+        assert set(pd.particle_ids()) == set(pids)
+
+
+# ---------------------------------------------------------------------------
+# masked fused paths match dense per-particle references
+# ---------------------------------------------------------------------------
+
+def test_masked_bma_heads_match_dense_subset():
+    P_, B, C = 8, 5, 7
+    rng = np.random.default_rng(0)
+    outs = jnp.asarray(rng.standard_normal((P_, B, C)), jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], jnp.float32)
+    live = outs[np.asarray(mask) > 0]
+    for kind in ("classify", "regress"):
+        got = predictive_heads(outs, kind, mask)
+        want = predictive_heads(live, kind)
+        for k in want:
+            err = float(jnp.abs(got[k] - want[k]).max())
+            assert err < 1e-5, (kind, k, err)
+
+
+def test_masked_heads_ignore_nan_in_dead_slots():
+    outs = jnp.stack([jnp.ones((2, 3)), jnp.full((2, 3), jnp.nan)])
+    mask = jnp.asarray([1.0, 0.0])
+    got = predictive_heads(outs, "regress", mask)
+    assert bool(jnp.all(jnp.isfinite(got["mean"])))
+
+
+def test_masked_svgd_force_matches_dense_subset():
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(rng.standard_normal((8, 6)), jnp.float32)
+    grads = jnp.asarray(rng.standard_normal((8, 6)), jnp.float32)
+    mask = jnp.asarray([1, 1, 0, 1, 0, 1, 1, 0], jnp.float32)
+    keep = np.asarray(mask) > 0
+    for ell in (1.0, -1.0):            # fixed + median heuristic
+        got = svgd_force(theta, grads, ell, mask=mask)
+        want = svgd_force(theta[keep], grads[keep], ell)
+        err = float(jnp.abs(got[keep] - want).max())
+        assert err < 1e-5, (ell, err)
+        assert float(jnp.abs(got[~keep]).max()) == 0.0
+
+
+def test_masked_fused_svgd_step_freezes_dead_slots():
+    mod = _module()
+    step = jax.jit(fused_svgd_step(mod.loss, lr=0.1, lengthscale=1.0))
+    stacked = jax.vmap(mod.init)(jax.random.split(jax.random.PRNGKey(0), 4))
+    mask = jnp.asarray([1, 1, 0, 1], jnp.float32)
+    new, losses = step(stacked, _batch(), mask)
+    assert bool(jnp.array_equal(new["w"][2], stacked["w"][2]))  # frozen
+    assert float(losses[2]) == 0.0
+    assert not bool(jnp.array_equal(new["w"][0], stacked["w"][0]))
+
+
+def test_p_predict_after_churn_matches_live_reference():
+    with PushDistribution(_module(), num_devices=1, seed=0,
+                          backend="compiled", capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        b = _batch()
+        pd.p_predict(b)                            # compile at capacity 4
+        pd.p_kill(pids[2])
+        cold = _cold()
+        got = pd.p_predict(b)                      # churned: same program
+        assert _cold() == cold
+        live = [p for p in pids if p != pids[2]]
+        ref = np.mean([np.asarray(b[0] @ pd.p_params(p)["w"]
+                                  + pd.p_params(p)["b"]) for p in live], 0)
+        assert np.abs(np.asarray(got) - ref).max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile churn under a serving engine
+# ---------------------------------------------------------------------------
+
+def test_serving_survives_churn_with_zero_cold_compiles():
+    with PushDistribution(_module(), num_devices=1, seed=0,
+                          backend="compiled", capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.05)) for _ in range(4)]
+        x = jax.random.normal(jax.random.PRNGKey(9), (8, 3))
+        eng = PredictiveEngine(pd.module.forward, store=pd.store,
+                               kind="regress")
+        eng.predict((x, None))                     # warm compile
+        cold = _cold()
+        for round_ in range(3):
+            victim = pd.particle_ids()[0]
+            pd.p_kill(victim)
+            src = pd.particle_ids()[0]
+            pd.p_clone(src, jitter=0.01)
+            heads = eng.predict((x, None))
+            live = pd.particle_ids()
+            ref = np.mean([np.asarray(x @ pd.p_params(p)["w"]
+                                      + pd.p_params(p)["b"])
+                           for p in live], 0)
+            assert np.abs(np.asarray(heads["mean"]) - ref).max() < 1e-5
+        assert _cold() == cold, "churn must not recompile serving programs"
+        assert pd.stats()["lifecycle"]["clones"] == 3
+        assert pd.stats()["lifecycle"]["kills"] == 3
+
+
+def test_fused_training_after_churn_reuses_program():
+    data = [_batch()]
+    with DeepEnsemble(_module(), num_devices=1, seed=0,
+                      backend="compiled") as de:
+        pd = de.push_dist
+        pids, _ = de.bayes_infer(data, 2, optimizer=sgd(0.05),
+                                 num_particles=4)
+        cold = _cold()
+        pd.p_kill(pids[1])
+        pd.p_clone(pids[0], jitter=0.01)
+        # same capacity, same generation -> the padded-path epoch loop
+        # reuses the compiled step exactly
+        de._fused_epochs(pd.store.pids, data, 2, optimizer=sgd(0.05))
+        assert _cold() == cold + 1  # one new optimizer identity compiles
+        de._fused_epochs(pd.store.pids, data, 2, optimizer=sgd(0.05))
+        # regression: after churn, pid order != slot order — enumerating
+        # via particle_ids() must still take the padded zero-recompile
+        # path (set comparison, not list order)
+        assert pd.particle_ids() != pd.store.pids
+        cold2 = _cold()
+        opt = sgd(0.05)
+        de._fused_epochs(pd.particle_ids(), data, 1, optimizer=opt)
+        de._fused_epochs(pd.store.pids, data, 1, optimizer=opt)
+        assert _cold() == cold2 + 1  # ONE compile (new opt), shared by both
+
+
+def test_members_returns_live_rows_only_after_churn():
+    with PushDistribution(_module(), num_devices=1, seed=0,
+                          backend="compiled", capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        x = jax.random.normal(jax.random.PRNGKey(7), (5, 3))
+        eng = PredictiveEngine(pd.module.forward, store=pd.store,
+                               kind="regress")
+        _, outs = eng.predict((x, None), members=True)
+        assert outs.shape[0] == 4
+        pd.p_kill(pids[3])
+        _, outs = eng.predict((x, None), members=True)
+        assert outs.shape[0] == 3          # live rows only, slot order
+        ref = np.stack([np.asarray(x @ pd.p_params(p)["w"]
+                                   + pd.p_params(p)["b"])
+                        for p in pd.store.pids])
+        assert np.abs(np.asarray(outs) - ref).max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# lifecycle policies (bdl/lifecycle.py)
+# ---------------------------------------------------------------------------
+
+def test_systematic_counts_preserve_total_and_favor_weight():
+    counts = lifecycle.systematic_counts([0.7, 0.1, 0.1, 0.1], 4,
+                                         np.random.default_rng(0))
+    assert sum(counts) == 4
+    assert counts[0] >= 2               # heavy lineage multiplies
+
+
+def test_resample_preserves_live_count_and_capacity():
+    data = [_batch()]
+    with DeepEnsemble(_module(), num_devices=1, seed=0,
+                      backend="compiled") as de:
+        pd = de.push_dist
+        de.bayes_infer(data, 2, optimizer=sgd(0.05), num_particles=4)
+        cap, gen = pd.store.capacity, pd.store.generation()
+        lifecycle.ensemble_weights(de, data[0])  # warm the loss program
+        cold = _cold()
+        live = lifecycle.resample(de, batch=data[0], jitter=0.01,
+                                  rng=np.random.default_rng(1))
+        assert len(live) == 4
+        assert pd.store.capacity == cap and pd.store.generation() == gen
+        assert _cold() == cold          # churn compiled nothing
+        stats = pd.stats()["lifecycle"]
+        assert stats["kills"] == stats["clones"]
+
+
+def test_grow_warm_starts_from_best_member():
+    data = [_batch()]
+    with DeepEnsemble(_module(), num_devices=1, seed=0,
+                      backend="compiled") as de:
+        pd = de.push_dist
+        de.bayes_infer(data, 2, optimizer=sgd(0.05), num_particles=2)
+        w = lifecycle.ensemble_weights(de, data[0])
+        best = max(w, key=w.get)
+        new = lifecycle.grow(de, 2, jitter=0.02, weights=w,
+                             optimizer=sgd(0.05))
+        assert len(pd.particle_ids()) == 4
+        for pid in new:
+            d = float(jnp.abs(pd.p_params(pid)["w"]
+                              - pd.p_params(best)["w"]).max())
+            assert 0.0 < d < 0.5        # warm start near the best member
+        # progressive training continues over the widened ensemble
+        de._fused_epochs(pd.store.pids, data, 2, optimizer=sgd(0.05))
+
+
+def test_infer_forwards_capacity_for_recompile_free_growth():
+    data = [_batch()]
+    with DeepEnsemble(_module(), num_devices=1, seed=0, backend="compiled",
+                      capacity=8) as de:
+        pd = de.push_dist
+        assert pd.store.capacity == 8
+        de.bayes_infer(data, 1, optimizer=sgd(0.05), num_particles=4)
+        gen = pd.store.generation()
+        lifecycle.grow(de, 2, jitter=0.01)     # fits: no doubling
+        assert pd.store.generation() == gen
+        assert pd.store.capacity == 8
+
+
+def test_prune_keeps_heaviest_members():
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        weights = {p: float(i) for i, p in enumerate(pids)}
+        live = lifecycle.prune(pd, 2, weights=weights)
+        assert sorted(live) == sorted(pids[2:])
+
+
+def test_slot_activates_only_after_data_lands():
+    """The churn window a concurrent serve could hit: between register
+    and the first state write the slot must stay masked OFF — otherwise
+    the BMA averages the previous occupant's stale row (or zeros)."""
+    store = ParticleStore(capacity=4)
+    store.register(0)
+    assert np.asarray(store.active_mask()).sum() == 0     # no data yet
+    store.write("params", 0, {"w": jnp.ones((2,))})
+    assert np.allclose(np.asarray(store.active_mask()), [1, 0, 0, 0])
+    store.register(1)
+    assert np.allclose(np.asarray(store.active_mask()), [1, 0, 0, 0])
+    store.write("params", 1, {"w": jnp.zeros((2,))})
+    assert np.allclose(np.asarray(store.active_mask()), [1, 1, 0, 0])
+
+
+def test_mid_run_register_survives_full_commit():
+    """A particle created while a fused run holds a full checkout keeps
+    its written params across that run's commit (the commit only covers
+    the cohort it checked out)."""
+    store = ParticleStore(capacity=4)
+    for pid in range(2):
+        store.register(pid)
+        store.write("params", pid, {"w": jnp.full((2,), float(pid))})
+    co = store.checkout("params")
+    assert jax.tree.leaves(co)[0].shape[0] == 4
+    store.register(5)                                     # mid-run create
+    store.write("params", 5, {"w": jnp.full((2,), 9.0)})
+    new = jax.tree.map(lambda x: x + 1.0, co)
+    store.commit("params", new)
+    # the committing run's cohort took the +1; the newcomer kept its row
+    assert float(store.read("params", 0)["w"][0]) == 1.0
+    assert float(store.read("params", 1)["w"][0]) == 2.0
+    assert float(store.read("params", 5)["w"][0]) == 9.0
+    st = store.stacked("params")
+    assert float(jax.tree.leaves(st)[0][store.slot_of(5), 0]) == 9.0
+    assert np.asarray(store.active_mask()).sum() == 3
+
+
+def test_clone_during_checkout_fails_loudly():
+    """Cloning a key a fused run has checked out is impossible (the data
+    moved out, likely donated) — the error must say so, not claim the
+    data is missing."""
+    store = ParticleStore(capacity=4)
+    store.register(0)
+    store.write("params", 0, {"w": jnp.ones((2,))})
+    store.register(1)
+    co = store.checkout("params")
+    with pytest.raises(RuntimeError, match="checked out"):
+        store.clone_slot("params", 0, 1)
+    store.commit("params", co)
+    store.clone_slot("params", 0, 1)            # fine after commit
+    assert float(store.read("params", 1)["w"][0]) == 1.0
+
+
+def test_capacity_growth_during_checkout_does_not_lose_the_run():
+    """A p_create that doubles capacity while a fused run holds a full
+    checkout must not make the run's commit fail (the committed tree is
+    validated against the checkout-era capacity and padded up)."""
+    store = ParticleStore()                     # grows on demand
+    for pid in range(2):
+        store.register(pid)
+        store.write("params", pid, {"w": jnp.full((2,), float(pid))})
+    co = store.checkout("params")               # capacity 2
+    store.register(2)                           # grow: capacity 2 -> 4
+    store.write("params", 2, {"w": jnp.full((2,), 7.0)})
+    store.commit("params", jax.tree.map(lambda x: x + 1.0, co))
+    assert store.capacity == 4
+    assert float(store.read("params", 0)["w"][0]) == 1.0
+    assert float(store.read("params", 2)["w"][0]) == 7.0
+    st = store.stacked("params")
+    assert jax.tree.leaves(st)[0].shape[0] == 4
+
+
+# ---------------------------------------------------------------------------
+# elastic checkpoint: restore across capacities
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_across_capacities(tmp_path):
+    from repro.checkpoint import restore_store, save_store
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        pd.p_kill(pids[2])              # a hole in the slot layout
+        save_store(str(tmp_path), 1, pd.store)
+        live = pd.store.pids
+        for cap, want_cap in ((None, 4), (8, 8), (2, 4)):
+            # saved capacity / grown / shrink-to-fit (2 < 3 live -> 4)
+            step, s2 = restore_store(str(tmp_path), capacity=cap)
+            assert step == 1 and s2.pids == live
+            assert s2.capacity == want_cap
+            assert int(np.asarray(s2.active_mask()).sum()) == 3
+            for p in live:
+                a = pd.store.read("params", p)
+                b = s2.read("params", p)
+                for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    assert np.array_equal(np.asarray(u), np.asarray(v))
+            # restored store serves immediately with masked BMA
+            eng = PredictiveEngine(pd.module.forward, store=s2,
+                                   kind="regress")
+            x = jax.random.normal(jax.random.PRNGKey(2), (4, 3))
+            heads = eng.predict((x, None))
+            ref = np.mean([np.asarray(x @ pd.p_params(p)["w"]
+                                      + pd.p_params(p)["b"])
+                           for p in live], 0)
+            assert np.abs(np.asarray(heads["mean"]) - ref).max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+def test_stats_exposes_lifecycle_counters():
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        a = pd.p_create(sgd(0.1))
+        b = pd.p_clone(a)
+        pd.p_kill(b)
+        pd.p_rebalance()
+        lc = pd.stats()["lifecycle"]
+        assert lc["capacity"] == 4 and lc["live"] == 1
+        assert lc["free_slots"] == 3
+        assert lc["clones"] == 1 and lc["kills"] == 1
+        assert lc["rebalances"] == 1
+        assert lc["mask_invalidations"] >= 3

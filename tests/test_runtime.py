@@ -154,13 +154,14 @@ def test_compile_helpers_share_runtime_programs_via_state_token():
         de.bayes_infer(data, 2, optimizer=opt, num_particles=4)
         hits0 = global_cache().snapshot_stats()["hits"]
         tok = de.store.generation()
+        mask = de.store.active_mask()
         st = de.store.checkout("params", None)
         ost = de.store.checkout("opt_state", None)
         step = functional.compile_ensemble_step(
-            mod.loss, opt, de.placement, st, ost, data[0],
+            mod.loss, opt, de.placement, st, ost, data[0], mask,
             state_token=tok)
         assert global_cache().snapshot_stats()["hits"] == hits0 + 1
-        np_, no_, _ = step(st, ost, data[0])
+        np_, no_, _ = step(st, ost, data[0], mask)
         de.store.commit("params", np_)
         de.store.commit("opt_state", no_)
 

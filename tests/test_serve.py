@@ -244,7 +244,9 @@ def test_engine_stateful_step_matches_per_particle_loop():
         with pytest.raises(RuntimeError):
             eng.predict({"x": jnp.ones((1, 3))})     # wrong entry point
         state = eng.init_state(lambda p: {"acc": jnp.zeros(())})
-        assert jax.tree.leaves(state)[0].shape[0] == 3
+        # serving state is born capacity-padded (3 live -> capacity 4);
+        # dead rows ride along masked out
+        assert jax.tree.leaves(state)[0].shape[0] == pd.store.capacity == 4
         x = jax.random.normal(jax.random.PRNGKey(6), (4, 3))
         member = np.stack(
             [np.asarray(x @ pd.p_params(p)["w"] + pd.p_params(p)["b"])
