@@ -1,0 +1,166 @@
+"""Continuous-batching decode vs flush-batched decode (DESIGN.md §10).
+
+The PR-6 acceptance bar: under an open-loop mixed-length load (mostly
+short sequences plus a heavy-tail straggler per group), the
+DecodeScheduler must deliver >= 2x the generated-tokens/sec of
+flush-batched decode at 8 particles, with ZERO cold compiles after
+warmup. Both sides run the identical stack — PagedDecodeEngine programs,
+page pool, packed one-H2D step inputs — and differ only in admission:
+
+  flush       submit ``max_active`` sequences, wait for ALL of them to
+              retire before submitting the next group — finished rows
+              idle at the barrier while the group straggler decodes;
+  continuous  submit everything up front — rows refill from the waiting
+              queue in the same step a sequence retires.
+
+So the measured ratio isolates exactly what per-step admission buys.
+
+Rows:
+  decode/flush/p{P}        us_per_token, tok_per_s     (group barrier)
+  decode/continuous/p{P}   us_per_token, tok_per_s + row occupancy
+  decode/speedup/p{P}      ratio, x_over_flush
+  decode/latency/p{P}      p50 us, p95/p99 derived     (continuous)
+  decode/pages/p{P}        peak page occupancy, pool utilisation
+  decode/compiles/p{P}     cold compiles in the timed region (want 0)
+
+``python -m benchmarks.run --only decode`` persists the rows to
+BENCH_decode.json; ``python -m benchmarks.bench_decode --require 2.0``
+enforces the speedup + zero-cold-compile bar (CI, both matrix jobs).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import configs
+from repro.core import ParticleModule, PushDistribution
+from repro.models import api
+from repro.runtime import global_cache
+from repro.serve import serve_decode
+
+from .util import emit
+
+PARTICLES = (2, 8)
+MAX_ACTIVE = 8
+GROUPS = 3
+SHORT_NEW, LONG_NEW = 6, 64          # one straggler per group
+PAGE_SIZE = 8
+NUM_PAGES = 96
+
+
+def _lm_module(cfg):
+    return ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+
+
+def _cfg():
+    return configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=128)
+
+
+def _load(rng):
+    """Open-loop mixed-length request list: per group of MAX_ACTIVE, one
+    heavy-tail straggler and MAX_ACTIVE-1 short sequences."""
+    reqs = []
+    for g in range(GROUPS):
+        for j in range(MAX_ACTIVE):
+            prompt = list(rng.integers(1, 128, int(rng.integers(3, 14))))
+            max_new = LONG_NEW if j == 0 else SHORT_NEW
+            reqs.append((prompt, max_new))
+    return reqs
+
+
+def _drive_flush(svc, reqs):
+    """Group barrier: the defining waste of flush batching — no admission
+    until the whole group retired."""
+    t0 = time.perf_counter()
+    toks = 0
+    for g in range(0, len(reqs), MAX_ACTIVE):
+        handles = [svc.generate_async(p, max_new=m)
+                   for p, m in reqs[g:g + MAX_ACTIVE]]
+        toks += sum(len(h.result(600.0).tokens) for h in handles)
+    return time.perf_counter() - t0, toks
+
+
+def _drive_continuous(svc, reqs):
+    """Open loop: everything submitted up front, rows refill per step."""
+    t0 = time.perf_counter()
+    handles = [svc.generate_async(p, max_new=m) for p, m in reqs]
+    toks = sum(len(h.result(600.0).tokens) for h in handles)
+    return time.perf_counter() - t0, toks
+
+
+def run(require: float | None = None):
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    reqs = _load(rng)
+    for P in PARTICLES:
+        with PushDistribution(_lm_module(cfg), num_devices=1, seed=0) as pd:
+            for _ in range(P):
+                pd.p_create()
+            svc = serve_decode(pd, cfg, num_pages=NUM_PAGES,
+                               page_size=PAGE_SIZE, max_active=MAX_ACTIVE,
+                               max_queue=4 * len(reqs), decode_kernel=False,
+                               warmup_buckets=(4, 8, 16))
+            try:
+                # warm every program the load can hit before timing
+                svc.generate(reqs[0][0], max_new=2)
+                cold0 = global_cache().snapshot_stats()["cold_compiles"]
+
+                dt_f, tok_f = _drive_flush(svc, reqs)
+                dt_c, tok_c = _drive_continuous(svc, reqs)
+                cold = global_cache().snapshot_stats()["cold_compiles"] \
+                    - cold0
+                st = svc.stats()
+
+                emit(f"decode/flush/p{P}", dt_f / tok_f * 1e6,
+                     f"tok_per_s={tok_f / dt_f:.1f}")
+                emit(f"decode/continuous/p{P}", dt_c / tok_c * 1e6,
+                     f"tok_per_s={tok_c / dt_c:.1f};"
+                     f"occupancy={st['row_occupancy']:.2f}")
+                speedup = dt_f / dt_c
+                emit(f"decode/speedup/p{P}", speedup, "x_over_flush")
+                emit(f"decode/latency/p{P}", st["latency_p50_ms"] * 1e3,
+                     f"p95_us={st['latency_p95_ms'] * 1e3:.0f};"
+                     f"p99_us={st['latency_p99_ms'] * 1e3:.0f}")
+                pool = st["pool"]
+                emit(f"decode/pages/p{P}",
+                     pool["peak_used"] / pool["num_pages"] * 1e2,
+                     f"peak_used={pool['peak_used']};"
+                     f"num_pages={pool['num_pages']};"
+                     f"preempted={st['preempted']}")
+                emit(f"decode/compiles/p{P}", float(cold),
+                     "cold_compiles_after_warmup")
+
+                if require is not None and P == 8:
+                    if cold != 0:
+                        raise SystemExit(
+                            f"{cold} cold compiles during steady-state "
+                            "decode (want 0 after warmup)")
+                    if speedup < require:
+                        raise SystemExit(
+                            f"continuous/flush decode speedup "
+                            f"{speedup:.2f}x < required {require:.1f}x "
+                            f"at {P} particles")
+            finally:
+                svc.close()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--require", type=float, default=None,
+                    help="fail unless continuous/flush >= this at 8 "
+                         "particles AND zero cold compiles after warmup "
+                         "(acceptance: 2.0)")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(require=a.require)
+
+
+if __name__ == "__main__":
+    main()

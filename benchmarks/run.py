@@ -15,6 +15,11 @@ one-request-at-a-time throughput, fused-call latency across batch sizes
 and particle counts); CI enforces the >= 3x micro-batching bar via
 ``bench_serve --require``.
 
+Decode rows land in ``BENCH_decode.json`` (continuous-batching vs
+flush-batched tokens/sec, retirement latency percentiles, page-pool
+occupancy); CI enforces the >= 2x continuous-batching bar via
+``bench_decode --require``.
+
 Compile rows land in ``BENCH_runtime.json`` (cold-compile counts and
 ProgramCache hit rate across the train -> serve lifecycle); CI enforces
 a minimum hit rate via ``bench_compile --require-hit-rate``.
@@ -29,6 +34,8 @@ a minimum hit rate via ``bench_compile --require-hit-rate``.
   bench_compile          (ours)           ProgramCache compile economics
   bench_lifecycle        (ours)           elastic churn: ops/sec, recompiles,
                                           serve latency under clone/kill
+  bench_decode           (ours)           continuous-batching paged decode vs
+                                          flush-batched (tok/s, p99, pages)
 """
 import argparse
 import functools
@@ -51,10 +58,13 @@ def main() -> None:
                     help="where to persist the compile/cache rows")
     ap.add_argument("--lifecycle-json", default="BENCH_lifecycle.json",
                     help="where to persist the churn rows")
+    ap.add_argument("--decode-json", default="BENCH_decode.json",
+                    help="where to persist the decode rows")
     args = ap.parse_args()
-    from . import (bench_accuracy, bench_compile, bench_depth_particles,
-                   bench_dispatch, bench_kernels, bench_lifecycle,
-                   bench_scaling, bench_serve, bench_stress, util)
+    from . import (bench_accuracy, bench_compile, bench_decode,
+                   bench_depth_particles, bench_dispatch, bench_kernels,
+                   bench_lifecycle, bench_scaling, bench_serve,
+                   bench_stress, util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
                                      backend=args.scaling_backend),
@@ -66,6 +76,7 @@ def main() -> None:
         "serve": bench_serve.run,
         "compile": bench_compile.run,
         "lifecycle": bench_lifecycle.run,
+        "decode": bench_decode.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
@@ -107,6 +118,14 @@ def main() -> None:
             json.dump({"devices": len(jax.devices()), "rows": rows}, f,
                       indent=1)
         print(f"# wrote {len(rows)} lifecycle rows -> {args.lifecycle_json}",
+              flush=True)
+    if "decode" in only:
+        import jax
+        rows = [r for r in util.ROWS if r["name"].startswith("decode/")]
+        with open(args.decode_json, "w") as f:
+            json.dump({"devices": len(jax.devices()), "rows": rows}, f,
+                      indent=1)
+        print(f"# wrote {len(rows)} decode rows -> {args.decode_json}",
               flush=True)
 
 

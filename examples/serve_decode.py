@@ -1,47 +1,54 @@
-"""Batched LM serving through `repro.serve`: a posterior-predictive
-decode loop where ALL particles run in one fused program per token.
+"""Streaming LM serving through `repro.serve.serve_decode`: continuous
+batching over a paged KV cache, all particles fused per decode step.
 
 A qwen-family serve ensemble (P particles standing in for SWAG draws)
-lives in a PushDistribution's ParticleStore; a stateful PredictiveEngine
-compiles one fused step — every particle's decode forward over the
-stacked axis, Bayesian-model-averaged logits, predictive entropy and
-mutual information — and the per-particle KV caches ride the stacked
-axis on device across the whole generation. Cache attention runs through
-the Pallas decode kernel (`decode_kernel=True`).
+lives in a PushDistribution's ParticleStore. `serve_decode` installs a
+paged KV pool (`kv_pages`) on the stacked particle axis and starts a
+DecodeScheduler: requests of very different lengths are admitted and
+retired *per decode step* — a short generation never waits for a long
+one to finish, and a finished row is refilled from the queue in the
+same step it retires. Every step is ONE fixed-shape fused program
+(BMA-averaged greedy head + per-token entropy / mutual information)
+and ONE host-to-device transfer, so steady-state decode compiles
+nothing regardless of admission order.
 
-Contrast with the pre-serve version of this example, which hand-rolled a
-Python loop over particles with a host sync per (particle, step) pair.
+Contrast with the pre-PR-6 version of this example, which ran a dense
+flush batch: per-request KV sized to max_seq_len and every sequence in
+the batch stepping until the LAST one finished.
 
-Run:  PYTHONPATH=src python examples/serve_decode.py --steps 16 --batch 4
+Run:  PYTHONPATH=src python examples/serve_decode.py --requests 12
 """
 import argparse
-import functools
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.core import ParticleModule, PushDistribution
-from repro.data.synthetic import lm_batch
 from repro.models import api
-from repro.serve import PredictiveEngine
+from repro.runtime import global_cache
+from repro.serve import serve_decode
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-active", type=int, default=4)
     ap.add_argument("--particles", type=int, default=2)
-    ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--decode-kernel", action="store_true",
+                    help="route paged attention through the Pallas kernel "
+                         "(interpret mode on CPU: slow but exercised)")
     a = ap.parse_args()
 
     cfg = configs.get("qwen1.5-0.5b").replace(
-        n_units=a.layers, d_model=a.d_model, n_heads=8, n_kv_heads=8,
-        head_dim=32, d_ff=a.d_model * 3, vocab_size=2048, max_seq_len=4096)
+        n_units=a.layers, d_model=a.d_model, n_heads=8, n_kv_heads=4,
+        head_dim=a.d_model // 8, d_ff=a.d_model * 3, vocab_size=2048,
+        max_seq_len=1024)
 
     # the serve ensemble is a PushDistribution: particles in the store
     module = ParticleModule(
@@ -52,60 +59,52 @@ def main():
         for _ in range(a.particles):
             pd.p_create()
         n_params = sum(x.size for x in jax.tree.leaves(pd.p_params(0)))
-        print(f"model: {a.layers}L d={a.d_model} ({n_params/1e6:.1f}M params), "
-              f"serve ensemble P={a.particles}")
+        print(f"model: {a.layers}L d={a.d_model} ({n_params/1e6:.1f}M "
+              f"params), serve ensemble P={a.particles}")
 
-        prompts = jnp.asarray(lm_batch(np.random.default_rng(0), a.batch,
-                                       a.prompt_len, cfg.vocab_size)["tokens"])
-        total_len = a.prompt_len + a.steps + 1
+        svc = serve_decode(pd, cfg, num_pages=a.num_pages,
+                           page_size=a.page_size, max_active=a.max_active,
+                           decode_kernel=a.decode_kernel,
+                           warmup_buckets=(8, 16, 32))
+        try:
+            # mixed-length open-loop load: mostly short continuations plus
+            # heavy-tail stragglers — the case flush batching handles worst
+            rng = np.random.default_rng(0)
+            reqs = []
+            for i in range(a.requests):
+                prompt = list(rng.integers(1, cfg.vocab_size,
+                                           int(rng.integers(8, 25))))
+                reqs.append((prompt, 96 if i % 4 == 0 else 12))
 
-        # stateful engine: fused BMA decode, per-particle KV caches stacked
-        decode = functools.partial(api.decode_step, cfg=cfg,
-                                   decode_kernel=True)
-        engine = PredictiveEngine(
-            lambda p, caches, b: decode(p, b[0], caches, b[1]),
-            store=pd.store, kind="classify", stateful=True)
+            cold0 = global_cache().snapshot_stats()["cold_compiles"]
+            t0 = time.perf_counter()
+            handles = [svc.generate_async(p, max_new=m) for p, m in reqs]
+            gens = [h.result(600.0) for h in handles]
+            dt = time.perf_counter() - t0
+            toks = sum(len(g.tokens) for g in gens)
+            cold = global_cache().snapshot_stats()["cold_compiles"] - cold0
 
-        # --- prefill: one vmapped pass yields BOTH the stacked caches and
-        # the first BMA logits (prompt FLOPs paid once, one program) ------
-        t0 = time.perf_counter()
-        first, caches = jax.jit(jax.vmap(
-            lambda p: api.prefill(p, {"tokens": prompts}, cfg,
-                                  max_len=total_len)))(
-            engine.stacked_params())
-        logits = jnp.mean(first.astype(jnp.float32), 0)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
-        print(f"prefill: {a.batch} x {a.prompt_len} tokens in "
-              f"{t_prefill:.2f}s "
-              f"({a.batch * a.prompt_len / t_prefill:.0f} tok/s)")
-
-        # --- fused-BMA decode with uncertainty riding along --------------
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        generated, entropies, mis = [tok], [], []
-        t0 = time.perf_counter()
-        for step in range(a.steps):
-            heads, caches = engine.step(
-                caches, (tok, jnp.int32(a.prompt_len + step)))
-            tok = jnp.argmax(heads["mean"], -1).astype(jnp.int32)
-            generated.append(tok)
-            entropies.append(heads["entropy"])
-            mis.append(heads["mutual_info"])
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t0
-        toks = a.steps * a.batch
-        print(f"decode: {a.steps} steps x {a.batch} requests in "
-              f"{t_decode:.2f}s ({toks / t_decode:.1f} tok/s, "
-              f"{t_decode / a.steps * 1e3:.0f} ms/step)")
-        gen = jnp.stack(generated, 1)
-        ent = jnp.stack(entropies, 1)
-        mi = jnp.stack(mis, 1)
-        print("request 0 tokens   :", gen[0].tolist())
-        print("request 0 entropy  :",
-              [round(float(e), 2) for e in ent[0]])
-        print("request 0 mutualinf:",
-              [round(float(m), 3) for m in mi[0]])
-        print("engine:", engine.snapshot_stats())
+            st = svc.stats()
+            print(f"decode: {a.requests} requests ({toks} tokens, lengths "
+                  f"{sorted({len(g.tokens) for g in gens})}) in {dt:.2f}s "
+                  f"({toks / dt:.1f} tok/s)")
+            print(f"steps={st['steps']} prefills={st['prefills']} "
+                  f"h2d={st['h2d_transfers']} "
+                  f"occupancy={st['row_occupancy']:.2f} "
+                  f"peak_pages={st['pool']['peak_used']}/"
+                  f"{st['pool']['num_pages']} "
+                  f"preempted={st['preempted']} "
+                  f"cold_compiles_after_warmup={cold}")
+            g = gens[0]
+            print("request 0 tokens   :", g.tokens[:16])
+            print("request 0 entropy  :",
+                  [round(float(e), 2) for e in g.entropy[:8]])
+            print("request 0 mutualinf:",
+                  [round(float(m), 3) for m in g.mutual_info[:8]])
+            print(f"request 0 finished : {g.finish_reason} "
+                  f"(latency p50 {st['latency_p50_ms']:.0f} ms)")
+        finally:
+            svc.close()
 
 
 if __name__ == "__main__":

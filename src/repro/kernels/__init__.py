@@ -3,6 +3,8 @@
 #   swag_moments.py  — fused SWAG running-moment update
 #   attention.py     — blocked online-softmax (flash) prefill attention
 #   decode_attention.py — single-token decode over a (ring) KV cache
+#   paged_decode_attention.py — decode over a paged KV pool via block tables
 # ops.py: jit'd wrappers (interpret on CPU, compiled on TPU)
 # ref.py: pure-jnp oracles (allclose targets for tests)
-from . import attention, decode_attention, ops, ref, svgd_rbf, swag_moments
+from . import (attention, decode_attention, ops, paged_decode_attention, ref,
+               svgd_rbf, swag_moments)

@@ -5,7 +5,9 @@ reading the cache). One grid cell per (batch*kv_head); the cache streams
 through VMEM in (c_block, hd) tiles with an online-softmax accumulator in
 scratch — one HBM pass over the cache, no (C,) score materialization in
 HBM. Invalid slots (pos < 0, ring-cache holes) are masked via the pos
-tile. GQA: the G query heads of a kv head ride in one (G, hd) tile.
+tile; a ragged last tile (C % c_block != 0) is masked in-kernel with a
+column iota rather than padding the caches in HBM — callers never copy.
+GQA: the G query heads of a kv head ride in one (G, hd) tile.
 """
 from __future__ import annotations
 
@@ -21,7 +23,7 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr, acc_scr,
-                   *, scale: float, n_cb: int):
+                   *, scale: float, n_cb: int, c_block: int, c_len: int):
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
@@ -34,12 +36,20 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr, acc_scr,
     k = k_ref[...].astype(jnp.float32).reshape(-1, k_ref.shape[-1])
     v = v_ref[...].astype(jnp.float32).reshape(-1, v_ref.shape[-1])
     pos = pos_ref[...].reshape(1, -1)                      # (1, cb)
+    # Ragged tail: columns past the true cache length are out-of-bounds
+    # reads (undefined contents) — mask them by index, not by pos.
+    col = ci * c_block + jax.lax.broadcasted_iota(jnp.int32, (1, c_block), 1)
+    valid = (pos >= 0) & (col < c_len)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, cb)
-    s = jnp.where(pos >= 0, s, NEG_INF)
+    s = jnp.where(valid, s, NEG_INF)
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
     p = jnp.exp(s - m_new)
+    # Zero masked weights explicitly: on an all-masked tile exp(0)=1, and
+    # 0 * (undefined v) would still poison the accumulator with NaNs.
+    p = jnp.where(valid, p, 0.0)
+    v = jnp.where(valid.reshape(-1, 1), v, 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
@@ -64,21 +74,14 @@ def decode_attention(q, k_cache, v_cache, k_pos, *, c_block: int = 512,
     scale = 1.0 / math.sqrt(hd)
     c_block = min(c_block, C)
     n_cb = -(-C // c_block)
-    pad = n_cb * c_block - C
-    if pad:
-        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
-        C_p = C + pad
-    else:
-        C_p = C
 
     qr = q.reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
-    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * KVH, C_p, hd)
-    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * KVH, C_p, hd)
-    pr = jnp.repeat(k_pos, KVH, axis=0)                    # (B*KVH, C_p)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * KVH, C, hd)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * KVH, C, hd)
+    pr = jnp.repeat(k_pos, KVH, axis=0)                    # (B*KVH, C)
 
-    kernel = functools.partial(_decode_kernel, scale=scale, n_cb=n_cb)
+    kernel = functools.partial(_decode_kernel, scale=scale, n_cb=n_cb,
+                               c_block=c_block, c_len=C)
     out = pl.pallas_call(
         kernel,
         grid=(B * KVH, n_cb),

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import attention as _attention
 from . import decode_attention as _decode
+from . import paged_decode_attention as _paged
 from . import svgd_rbf as _svgd
 from . import swag_moments as _swag
 
@@ -48,3 +49,9 @@ def flash_attention(q, k, v, causal: bool = True, q_block: int = 128,
 def decode_attention(q, k_cache, v_cache, k_pos, c_block: int = 512):
     return _decode.decode_attention(q, k_cache, v_cache, k_pos,
                                     c_block=c_block, interpret=_interpret())
+
+
+@jax.jit
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    return _paged.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                         seq_lens, interpret=_interpret())

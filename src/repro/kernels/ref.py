@@ -56,3 +56,22 @@ def decode_attention(q, k_cache, v_cache, k_pos):
     p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     o = jnp.einsum("bngk,bknh->bngh", p, v_cache)
     return o.reshape(B, 1, H, hd)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    """q: (B,1,H,hd); pages (NP,ps,KVH,hd); block_tables (B,n_pmax) i32;
+    seq_lens (B,) i32 (-1 = inactive row) -> (B,1,H,hd).
+
+    Gathers each row's pages to a dense cache and reuses the dense
+    oracle; inactive rows return zeros."""
+    B = q.shape[0]
+    ps = k_pages.shape[1]
+    n_pmax = block_tables.shape[1]
+    k = jnp.take(k_pages, block_tables, axis=0).reshape(
+        B, n_pmax * ps, *k_pages.shape[2:])
+    v = jnp.take(v_pages, block_tables, axis=0).reshape(
+        B, n_pmax * ps, *v_pages.shape[2:])
+    col = jnp.arange(n_pmax * ps)[None, :]
+    pos = jnp.where(col <= seq_lens[:, None], col, -1)
+    out = decode_attention(q, k, v, pos)
+    return jnp.where((seq_lens >= 0)[:, None, None, None], out, 0.0)

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from .blocks import dense_apply, dense_init, norm_apply, norm_init
-from .transformer import (stack_apply_decode, stack_apply_full,
-                          stack_cache_init, stack_init)
+from .transformer import (paged_guard, stack_apply_decode, stack_apply_full,
+                          stack_apply_paged, stack_apply_prefill_paged,
+                          stack_cache_init, stack_init, stack_paged_init)
 from . import vit as vit_mod
 from . import unet1d as unet_mod
 from ..sharding.policy import maybe_shard
@@ -223,3 +224,55 @@ def decode_step(params, token, caches, cur_pos, cfg, *,
 
 def init_cache(cfg, batch: int, seq_len: int, dtype=None):
     return stack_cache_init(cfg, batch, seq_len, dtype or _cache_dtype(cfg))
+
+
+# --------------------------------------------------------------------------
+# serving: paged continuous-batching decode (repro.serve.DecodeScheduler)
+# --------------------------------------------------------------------------
+
+def paged_cache_init(cfg, *, num_pages: int, page_size: int, dtype=None):
+    """The per-particle KV page pool: one (num_pages, page_size, KVH, hd)
+    k/v pair per attention layer. Block tables are per-sequence and live
+    with the scheduler, not here."""
+    return stack_paged_init(cfg, num_pages, page_size,
+                            dtype or _cache_dtype(cfg))
+
+
+def decode_step_paged(params, tokens, pages, block_tables, seq_lens, cfg, *,
+                      decode_kernel: bool = True):
+    """One continuous-batching decode step.
+
+    tokens: (B,) i32 (garbage ok on inactive rows); block_tables:
+    (B, n_pmax) i32; seq_lens: (B,) i32 absolute position of each token
+    (-1 = inactive row: no pool writes, logits garbage — mask downstream).
+    Returns (logits (B, V), pages)."""
+    paged_guard(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed(params, jnp.maximum(tokens, 0)[:, None], cfg, dtype)
+    ctx: Dict[str, Any] = {"cache_dtype": _cache_dtype(cfg),
+                           "block_tables": block_tables,
+                           "seq_lens": seq_lens,
+                           "decode_kernel": decode_kernel}
+    x, pages = stack_apply_paged(params, x, cfg, pages, ctx)
+    x = norm_apply(params["final_norm"], x)
+    logits = _lm_logits(params, x, cfg)
+    return logits[:, 0], pages
+
+
+def prefill_paged(params, tokens, pages, block_table_row, n_tokens, cfg):
+    """Prompt prefill for ONE sequence into the page pool.
+
+    tokens: (1, Sp) i32 padded to a shape bucket; block_table_row:
+    (n_pmax,) i32; n_tokens: traced scalar count of real tokens.
+    Returns (last-real-token logits (1, V), pages)."""
+    paged_guard(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed(params, tokens, cfg, dtype)
+    ctx: Dict[str, Any] = {"cache_dtype": _cache_dtype(cfg),
+                           "block_table_row": block_table_row,
+                           "n_tokens": n_tokens}
+    x, pages = stack_apply_prefill_paged(params, x, cfg, pages, ctx)
+    x = norm_apply(params["final_norm"], x)
+    last = lax.dynamic_slice_in_dim(x, jnp.maximum(n_tokens - 1, 0), 1, axis=1)
+    logits = _lm_logits(params, last, cfg)
+    return logits[:, 0], pages

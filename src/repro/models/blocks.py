@@ -395,6 +395,98 @@ def attn_apply_decode(p, x, cfg, cache, *, cur_pos, window=0,
     return out, {"k": k_cache, "v": v_cache, "pos": k_pos}
 
 
+def paged_attention(q, k_pages, v_pages, *, block_tables, seq_lens,
+                    use_kernel: bool = True):
+    """Decode attention over a paged KV pool.
+
+    q: (B, 1, H, hd); k/v_pages: (NP, page_size, KVH, hd); block_tables:
+    (B, n_pmax) i32; seq_lens: (B,) i32 (last valid position, -1 =
+    inactive). ``use_kernel=False`` routes through the jnp gather oracle
+    (parity tests); the kernel path is the serve hot spot.
+    """
+    if use_kernel:
+        from ..kernels import ops as _kops
+        return _kops.paged_decode_attention(q, k_pages, v_pages,
+                                            block_tables, seq_lens)
+    from ..kernels import ref as _kref
+    return _kref.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                        seq_lens)
+
+
+def attn_apply_paged(p, x, cfg, pages, *, block_tables, seq_lens,
+                     use_kernel: bool = True):
+    """One continuous-batching decode step for one attention layer.
+
+    x: (B, 1, D); pages: {"k": (NP, ps, KVH, hd), "v": same};
+    block_tables: (B, n_pmax) i32; seq_lens: (B,) i32 — the absolute
+    position of the token in x. Rows with seq_lens < 0 are inactive:
+    nothing is written to the pool (out-of-range scatter dropped) and
+    their output rows are zeros. Returns (out, new_pages).
+    """
+    if cfg.logit_softcap > 0.0:
+        raise NotImplementedError("paged decode does not support logit softcap")
+    B = x.shape[0]
+    hd = cfg.hd
+    q = dense_apply(p["wq"], x).reshape(B, 1, cfg.n_heads, hd)
+    k = dense_apply(p["wk"], x).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], x).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        pos = seq_lens[:, None]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    NP, ps = pages["k"].shape[0], pages["k"].shape[1]
+    active = seq_lens >= 0
+    logical = jnp.where(active, seq_lens, 0) // ps
+    page_idx = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    page_idx = jnp.where(active, page_idx, NP)        # out of range -> dropped
+    slot = jnp.where(active, seq_lens, 0) % ps
+    k_pages = pages["k"].at[page_idx, slot].set(
+        k[:, 0].astype(pages["k"].dtype), mode="drop")
+    v_pages = pages["v"].at[page_idx, slot].set(
+        v[:, 0].astype(pages["v"].dtype), mode="drop")
+    out = paged_attention(q, k_pages, v_pages, block_tables=block_tables,
+                          seq_lens=seq_lens, use_kernel=use_kernel)
+    out = dense_apply(p["wo"], out.reshape(B, 1, -1))
+    return out, {"k": k_pages, "v": v_pages}
+
+
+def attn_apply_prefill_paged(p, x, cfg, pages, *, block_table_row, n_tokens):
+    """Chunked prompt prefill for ONE sequence into the page pool.
+
+    x: (1, Sp, D) prompt embeddings padded to a shape bucket; n_tokens is
+    a traced scalar count of real tokens. Attention runs as causal flash
+    over the padded prompt (the double-chunked online softmax keeps it
+    memory-bound — the blockwise-prefill idiom), then the K/V rows of the
+    real positions are scattered into the sequence's pages via its block
+    table. Returns (out (1, Sp, D), new_pages).
+    """
+    B, Sp, _ = x.shape
+    positions = jnp.arange(Sp)
+    q, k, v = attn_qkv(p, x, cfg, positions if cfg.rope_theta > 0 else None)
+    out = flash_attention(q, k, v, kind="causal", softcap=cfg.logit_softcap)
+    out = dense_apply(p["wo"], out.reshape(B, Sp, -1))
+    NP, ps = pages["k"].shape[0], pages["k"].shape[1]
+    valid = positions < n_tokens
+    page_idx = jnp.where(valid,
+                         jnp.take(block_table_row, positions // ps,
+                                  mode="clip"), NP)
+    slot = positions % ps
+    k_pages = pages["k"].at[page_idx, slot].set(
+        k[0].astype(pages["k"].dtype), mode="drop")
+    v_pages = pages["v"].at[page_idx, slot].set(
+        v[0].astype(pages["v"].dtype), mode="drop")
+    return out, {"k": k_pages, "v": v_pages}
+
+
+def attn_pages_init(cfg, num_pages: int, page_size: int, *,
+                    dtype=jnp.bfloat16):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, hd), dtype),
+    }
+
+
 def attn_cache_init(cfg, batch: int, seq_len: int, *, window: int = 0,
                     dtype=jnp.bfloat16):
     C = min(window, seq_len) if window else seq_len

@@ -17,9 +17,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .blocks import (attn_apply_decode, attn_apply_fullseq, attn_cache_init,
-                     attn_init, dense_apply, dense_init, mlp_apply, mlp_init,
-                     norm_apply, norm_init)
+from .blocks import (attn_apply_decode, attn_apply_fullseq, attn_apply_paged,
+                     attn_apply_prefill_paged, attn_cache_init, attn_init,
+                     attn_pages_init, dense_apply, dense_init, mlp_apply,
+                     mlp_init, norm_apply, norm_init)
 from . import moe as moe_mod
 from . import rwkv as rwkv_mod
 from . import mamba as mamba_mod
@@ -292,4 +293,109 @@ def stack_cache_init(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
         "head": tuple(layer_cache_init(k, cfg, batch, seq_len, dtype) for k in cfg.head_layers),
         "units": tuple(stacked(k) for k in cfg.pattern),
         "tail": tuple(layer_cache_init(k, cfg, batch, seq_len, dtype) for k in cfg.tail_layers),
+    }
+
+
+# --------------------------------------------------------------------------
+# paged stack (continuous-batching decode): the KV state is a pool of
+# fixed-size pages per layer, indexed by per-sequence block tables shared
+# across all layers. Restricted to global-attention stacks — sliding
+# windows, SSM/RWKV state and encoder-decoder caches have no paged form.
+# --------------------------------------------------------------------------
+
+PAGED_KINDS = ("attn_mlp", "attn_moe")
+
+
+def paged_guard(cfg):
+    kinds = tuple(cfg.head_layers) + tuple(cfg.pattern) + tuple(cfg.tail_layers)
+    bad = sorted({k for k in kinds if k not in PAGED_KINDS})
+    if bad:
+        raise NotImplementedError(
+            f"paged decode supports {PAGED_KINDS} stacks only, got {bad}")
+    if cfg.prefix_lm:
+        raise NotImplementedError("paged decode does not support prefix_lm")
+
+
+def _layer_apply_paged(kind, p, x, cfg, pages, ctx):
+    h, pages = attn_apply_paged(
+        p["attn"], norm_apply(p["ln1"], x), cfg, pages,
+        block_tables=ctx["block_tables"], seq_lens=ctx["seq_lens"],
+        use_kernel=ctx.get("decode_kernel", True))
+    x = x + h
+    if kind == "attn_moe":
+        h, _ = moe_mod.moe_apply(p["moe"], norm_apply(p["ln2"], x), cfg)
+    else:
+        h = mlp_apply(p["mlp"], norm_apply(p["ln2"], x), cfg)
+    return x + h, pages
+
+
+def _layer_apply_prefill_paged(kind, p, x, cfg, pages, ctx):
+    h, pages = attn_apply_prefill_paged(
+        p["attn"], norm_apply(p["ln1"], x), cfg, pages,
+        block_table_row=ctx["block_table_row"], n_tokens=ctx["n_tokens"])
+    x = x + h
+    if kind == "attn_moe":
+        h, _ = moe_mod.moe_apply(p["moe"], norm_apply(p["ln2"], x), cfg)
+    else:
+        h = mlp_apply(p["mlp"], norm_apply(p["ln2"], x), cfg)
+    return x + h, pages
+
+
+def _stack_apply_paged_common(params, x, cfg, pages, ctx, layer_fn):
+    new_head = []
+    for kind, p, pg in zip(cfg.head_layers, params["head"], pages["head"]):
+        x, pg = layer_fn(kind, p, x, cfg, pg, ctx)
+        new_head.append(pg)
+
+    new_units = pages["units"]
+    if cfg.n_units:
+        def body(x, scan_in):
+            dt = x.dtype
+            unit_params, unit_pages = scan_in
+            new_pages = []
+            for j, kind in enumerate(cfg.pattern):
+                x, pg = layer_fn(kind, unit_params[j], x, cfg,
+                                 unit_pages[j], ctx)
+                x = x.astype(dt)
+                new_pages.append(pg)
+            return x, tuple(new_pages)
+
+        x, new_units = lax.scan(body, x, (params["units"], pages["units"]))
+
+    new_tail = []
+    for kind, p, pg in zip(cfg.tail_layers, params["tail"], pages["tail"]):
+        x, pg = layer_fn(kind, p, x, cfg, pg, ctx)
+        new_tail.append(pg)
+    return x, {"head": tuple(new_head), "units": new_units,
+               "tail": tuple(new_tail)}
+
+
+def stack_apply_paged(params, x, cfg, pages, ctx):
+    """One decode step over the paged pool. x: (B, 1, D);
+    ctx: block_tables (B, n_pmax), seq_lens (B,). Returns (x, pages)."""
+    return _stack_apply_paged_common(params, x, cfg, pages, ctx,
+                                     _layer_apply_paged)
+
+
+def stack_apply_prefill_paged(params, x, cfg, pages, ctx):
+    """Prompt prefill for one sequence into the pool. x: (1, Sp, D);
+    ctx: block_table_row (n_pmax,), n_tokens scalar. Returns (x, pages)."""
+    return _stack_apply_paged_common(params, x, cfg, pages, ctx,
+                                     _layer_apply_prefill_paged)
+
+
+def stack_paged_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+    paged_guard(cfg)
+
+    def stacked():
+        one = attn_pages_init(cfg, num_pages, page_size, dtype=dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_units,) + a.shape), one)
+
+    return {
+        "head": tuple(attn_pages_init(cfg, num_pages, page_size, dtype=dtype)
+                      for _ in cfg.head_layers),
+        "units": tuple(stacked() for _ in cfg.pattern),
+        "tail": tuple(attn_pages_init(cfg, num_pages, page_size, dtype=dtype)
+                      for _ in cfg.tail_layers),
     }

@@ -74,7 +74,7 @@ class _BaseRuntime:
 
     def stats(self) -> Dict[str, Any]:
         ex = self.pd.nel.executor.stats()
-        return {
+        out = {
             "backend": self.name,
             "executor": ex,
             "dispatch": dict(self.pd.nel.stats),
@@ -83,6 +83,14 @@ class _BaseRuntime:
             "lifecycle": {**self.pd.store.lifecycle_stats(),
                           **getattr(self.pd, "lifecycle", {})},
         }
+        # continuous-batching decode, when a DecodeScheduler serves this
+        # store (lazy import: runtime must not depend on serve at module
+        # scope — serve already imports runtime)
+        from ..serve.batcher import decode_stats_for
+        decode = decode_stats_for(self.pd.store)
+        if decode is not None:
+            out["decode"] = decode
+        return out
 
 
 class NelRuntime(_BaseRuntime):

@@ -49,6 +49,76 @@ def ensemble_predict(forward: Callable) -> ProgramSpec:
         in_kinds=("state", "replicated", "replicated"))
 
 
+def paged_decode_step(decode_fn: Callable, reduce_fn: Callable, *,
+                      key: Tuple) -> ProgramSpec:
+    """One fixed-shape continuous-batching decode step.
+
+    ``decode_fn(params_row, pages_row, tokens, block_tables, seq_lens)
+    -> (logits, pages_row)`` is vmapped over the stacked particle axis
+    (params and pages batched; the step inputs replicated). The step
+    inputs arrive PACKED in one ``(B, 2 + n_pmax)`` i32 array —
+    ``[:, 0]`` tokens, ``[:, 1]`` seq_lens, ``[:, 2:]`` block tables —
+    so a scheduler step is exactly one H2D transfer. ``reduce_fn(member
+    logits (P, B, V), mask, ctx)`` produces the replicated per-row heads
+    (BMA + sampling live there). Pages are donated: the pool updates in
+    place on device, no per-step copy.
+
+    All shapes (max-active rows × max pages, capacity particles) are
+    scheduler constants, so the whole serving loop is ONE cached program
+    — admission/retirement churn only changes the packed values.
+    """
+    def make(ctx):
+        def fused(stacked_params, pages, packed, mask):
+            tokens, seq_lens, bt = packed[:, 0], packed[:, 1], packed[:, 2:]
+            logits, new_pages = jax.vmap(
+                decode_fn, in_axes=(0, 0, None, None, None),
+                spmd_axis_name=ctx.spmd_axis)(
+                stacked_params, pages, tokens, bt, seq_lens)
+            return reduce_fn(logits, mask, ctx), new_pages
+
+        return fused
+
+    return ProgramSpec(
+        name="paged_decode_step",
+        key=("paged_decode_step",) + tuple(key),
+        make=make,
+        in_kinds=("state", "state", "replicated", "replicated"),
+        out_kinds=("replicated", "in:1"),
+        donate=(1,))
+
+
+def paged_prefill(prefill_fn: Callable, reduce_fn: Callable, *, n_pmax: int,
+                  key: Tuple) -> ProgramSpec:
+    """Prompt admission: chunked prefill of ONE sequence into the pool.
+
+    ``prefill_fn(params_row, pages_row, tokens (1, Sp), block_table_row,
+    n_tokens) -> (last-token logits, pages_row)``; the packed input is a
+    ``(Sp + n_pmax + 1,)`` i32 vector ``[tokens..., block_table...,
+    n_tokens]`` (one H2D per admission; Sp is the caller's pow2 prompt
+    bucket, so the cache holds one program per bucket)."""
+    def make(ctx):
+        def fused(stacked_params, pages, packed, mask):
+            sp = packed.shape[0] - n_pmax - 1
+            tokens = packed[None, :sp]
+            bt_row = packed[sp:sp + n_pmax]
+            n_tokens = packed[-1]
+            logits, new_pages = jax.vmap(
+                prefill_fn, in_axes=(0, 0, None, None, None),
+                spmd_axis_name=ctx.spmd_axis)(
+                stacked_params, pages, tokens, bt_row, n_tokens)
+            return reduce_fn(logits, mask, ctx), new_pages
+
+        return fused
+
+    return ProgramSpec(
+        name="paged_prefill",
+        key=("paged_prefill", n_pmax) + tuple(key),
+        make=make,
+        in_kinds=("state", "state", "replicated", "replicated"),
+        out_kinds=("replicated", "in:1"),
+        donate=(1,))
+
+
 def map_step(fn: Callable, *, key: Tuple, n_state: int = 1,
              donate: Tuple[int, ...] = (0,), masked: bool = False
              ) -> ProgramSpec:

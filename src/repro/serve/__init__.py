@@ -1,13 +1,20 @@
 # Batched posterior-predictive serving over the sharded ParticleStore.
 # engine.py      — PredictiveEngine: fused BMA forward + uncertainty heads,
-#                  per-bucket compile cache, on-device particle reduction
+#                  per-bucket compile cache, on-device particle reduction;
+#                  PagedDecodeEngine: fixed-shape paged decode/prefill
 # batcher.py     — MicroBatcher: deadline/size-triggered request coalescing
-#                  on the PR-1 executor worker loop, bounded + backpressured
+#                  on the PR-1 executor worker loop, bounded + backpressured;
+#                  DecodeScheduler: per-step continuous batching for LM
+#                  decode (admit/retire each step, page backpressure)
+# paging.py      — paged KV pool: store scratch key + host free-page
+#                  allocator and per-sequence block tables
 # uncertainty.py — predictive heads (BMA mean, variance, entropy, BALD MI)
 # metrics.py     — NLL / ECE / Brier (+ NumPy references for tests)
-# service.py     — serve(pd).predict(x) front-end with latency percentiles
+# service.py     — serve(pd).predict(x) / serve_decode(pd).generate(ids)
+#                  front-ends with latency percentiles
 from . import metrics, uncertainty
-from .batcher import MicroBatcher
-from .engine import PredictiveEngine, bucket_size, pad_rows
-from .service import (PendingPrediction, Prediction, PredictiveService,
-                      serve)
+from .batcher import DecodeScheduler, Generation, MicroBatcher
+from .engine import PagedDecodeEngine, PredictiveEngine, bucket_size, pad_rows
+from .paging import PagePool, create_kv_pages
+from .service import (DecodeService, PendingGeneration, PendingPrediction,
+                      Prediction, PredictiveService, serve, serve_decode)

@@ -51,6 +51,7 @@ import numpy as np
 from ..core.store import ParticleStore, Placement
 from ..runtime import (ProgramCache, ProgramSpec, abstract_key, bucket_size,
                        global_cache, ident, pad_rows)
+from ..runtime.specs import paged_decode_step, paged_prefill
 from . import uncertainty
 
 
@@ -322,3 +323,122 @@ class PredictiveEngine:
     def snapshot_stats(self) -> Dict[str, int]:
         return dict(self.stats, programs=len(self._keys),
                     program_cache=self.cache.snapshot_stats())
+
+
+class PagedDecodeEngine(PredictiveEngine):
+    """Continuous-batching LM decode core over the paged KV pool.
+
+    Two fixed-shape programs ride the shared ProgramCache:
+
+      decode_step(packed)   one token for every active row — params and
+                            pages stacked over the particle axis, BMA +
+                            greedy sampling fused on device, pages
+                            donated (in-place pool update);
+      prefill(packed)       admit one sequence: chunked prompt prefill
+                            into its pages + the first sampled token
+                            (one program per pow2 prompt bucket).
+
+    The pages tree lives in the store under ``pages_key`` and crosses
+    each call by checkout/commit — content-version bumps only, so churn
+    in page ownership or page contents never recompiles anything; the
+    cache key carries the store *generation* exactly like params.
+
+    Packed input layouts are the runtime.specs contract: decode ships
+    ``(B, 2 + n_pmax)`` i32 (tokens / seq_lens / block tables), prefill
+    ships ``(Sp + n_pmax + 1,)`` i32 (tokens / block row / n_tokens) —
+    ONE H2D transfer per scheduler step by construction.
+    """
+
+    def __init__(self, decode_fn: Callable, prefill_fn: Callable, *,
+                 store: ParticleStore, n_pmax: int, key: str = "params",
+                 pages_key: str = "kv_pages",
+                 placement: Optional[Placement] = None,
+                 cache: Optional[ProgramCache] = None):
+        super().__init__(decode_fn, store=store, key=key, kind="classify",
+                         placement=placement, cache=cache)
+        self.decode_fn = decode_fn
+        self.prefill_fn = prefill_fn
+        self.pages_key = pages_key
+        self.n_pmax = n_pmax
+        self._pages_gen = None
+        self._pages_abs_key = None
+
+    # -- fused BMA + sampling head -------------------------------------------
+    def _reduce_fn(self):
+        kind = self.kind
+
+        def reduce_fn(member_logits, mask, ctx):
+            heads, _ = _bma_reduce_heads(member_logits, ctx.placement,
+                                         ctx.num_particles, kind, mask)
+            mean = heads["mean"]                        # (B, V) BMA probs
+            token = jnp.argmax(mean, axis=-1).astype(jnp.int32)
+            logprob = jnp.log(jnp.take_along_axis(
+                mean, token[:, None], axis=-1)[:, 0] + 1e-12)
+            return {"token": token, "logprob": logprob,
+                    "entropy": heads["entropy"],
+                    "mutual_info": heads["mutual_info"]}
+
+        return reduce_fn
+
+    def _decode_spec(self) -> ProgramSpec:
+        memo = self._spec_memo.get("paged_decode")
+        if memo is None:
+            memo = paged_decode_step(
+                self.decode_fn, self._reduce_fn(),
+                key=(ident(self.decode_fn), self.kind))
+            self._spec_memo["paged_decode"] = memo
+        return memo
+
+    def _prefill_spec(self) -> ProgramSpec:
+        memo = self._spec_memo.get("paged_prefill")
+        if memo is None:
+            memo = paged_prefill(
+                self.prefill_fn, self._reduce_fn(), n_pmax=self.n_pmax,
+                key=(ident(self.prefill_fn), self.kind))
+            self._spec_memo["paged_prefill"] = memo
+        return memo
+
+    # -- pages checkout/commit ------------------------------------------------
+    def _checkout_pages(self):
+        pages = self.store.checkout(self.pages_key)
+        gen = self.store.generation()
+        if gen != self._pages_gen:
+            # capacity-padded shapes: the abstract key can only change
+            # with the generation, so churn steps skip the tree walk
+            self._pages_abs_key = abstract_key(pages)
+            self._pages_gen = gen
+        return pages
+
+    def _run_paged(self, spec: ProgramSpec, packed):
+        self.stats["calls"] += 1
+        mask, params = self._mask_and_params()
+        pages = self._checkout_pages()
+        try:
+            args = (params, pages, packed, mask)
+            prog, hit = self.cache.lookup(
+                spec, self.placement, args, self._state_token(),
+                (self._params_key, self._pages_abs_key, None, None))
+            self._keys.add(prog.cache_key)
+            self.stats["bucket_hits" if hit else "compiles"] += 1
+            heads, new_pages = prog(*args)
+        except BaseException:
+            # return the (possibly donated-and-dead on a mid-execute
+            # failure, but always schema-correct) tree so the store key
+            # stays present for the next caller
+            self.store.commit(self.pages_key, pages)
+            raise
+        self.store.commit(self.pages_key, new_pages)
+        return heads
+
+    # -- serving entry points -------------------------------------------------
+    def decode_step(self, packed):
+        """packed: (B, 2 + n_pmax) i32 host array — [tokens, seq_lens,
+        block tables]; rows with seq_len -1 are inactive (their heads are
+        garbage — mask downstream). Returns the heads tree on device."""
+        return self._run_paged(self._decode_spec(), packed)
+
+    def prefill(self, packed):
+        """packed: (Sp + n_pmax + 1,) i32 host array — [prompt tokens
+        padded to the Sp bucket, block table row, n_tokens]. Returns
+        heads for the first generated token (leading axis 1)."""
+        return self._run_paged(self._prefill_spec(), packed)

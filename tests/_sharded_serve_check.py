@@ -190,9 +190,50 @@ def main():
         lc = pd.stats()["lifecycle"]
         assert lc["clones"] == 3 and lc["kills"] == 3 and lc["live"] == 4
 
+    # --- decode phase: continuous-batching paged decode under the mesh.
+    # The KV page pool is store state like params: born sharded over the
+    # particle axis, still sharded after serving, and steady-state decode
+    # steps (admission + retirement churn included) cold-compile NOTHING.
+    from repro import configs
+    from repro.core import PushDistribution
+    from repro.models import api
+    from repro.runtime import global_cache
+    from repro.serve import serve_decode
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=64)
+    lm = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+    with PushDistribution(lm, num_devices=1, seed=0,
+                          placement=placement) as pd:
+        for _ in range(N_PARTICLES):
+            pd.p_create()
+        svc = serve_decode(pd, cfg, num_pages=16, page_size=8,
+                           max_active=2, decode_kernel=False,
+                           warmup_buckets=(8,))
+        try:
+            check_sharded(pd.store, "kv_pages")
+            cold0 = global_cache().snapshot_stats()["cold_compiles"]
+            handles = [svc.generate_async([3 + i, 5, 7, 11, 13], max_new=4)
+                       for i in range(3)]
+            gens = [h.result(300) for h in handles]
+            assert all(len(g.tokens) == 4 for g in gens)
+            assert global_cache().snapshot_stats()["cold_compiles"] == cold0, \
+                "steady-state decode cold-compiled under the mesh"
+            check_sharded(pd.store, "kv_pages")    # pages still sharded
+            check_sharded(pd.store, "params")
+            dec = pd.stats()["decode"]
+            assert dec["retired"] == 3, dec
+            assert dec["pool"]["used_pages"] == 0, dec
+        finally:
+            svc.close()
+
     print(f"parity {err:.2e}, stacked state untouched across requests "
           f"({N_DEV} devices), heads replicated, stateful state sharded, "
-          "churn cold-compiled nothing")
+          "churn cold-compiled nothing, decode pages stayed sharded")
     print("OK")
 
 

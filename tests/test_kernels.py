@@ -107,6 +107,22 @@ def test_decode_attention_kernel(B, C, H, KVH, hd, cb, holes):
     assert jnp.abs(out - orf).max() < 2e-5
 
 
+@pytest.mark.parametrize("C,cb", [(100, 32), (33, 16), (7, 512), (65, 64)])
+def test_decode_attention_ragged_tail(C, cb):
+    """C % c_block != 0 is handled by in-kernel masking — no cache pad."""
+    from repro.kernels import decode_attention as dk
+    ks = jax.random.split(jax.random.PRNGKey(C), 3)
+    B, H, KVH, hd = 2, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, C, KVH, hd))
+    v = jax.random.normal(ks[2], (B, C, KVH, hd))
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C))
+    out = dk.decode_attention(q, k, v, pos, c_block=cb)
+    orf = ref.decode_attention(q, k, v, pos)
+    assert jnp.abs(out - orf).max() < 2e-5
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
 def test_decode_kernel_matches_model_decode_path():
     """Pallas decode kernel == models.blocks.decode_attention."""
     from repro.kernels import decode_attention as dk

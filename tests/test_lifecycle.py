@@ -227,6 +227,50 @@ def test_serving_survives_churn_with_zero_cold_compiles():
         assert pd.stats()["lifecycle"]["kills"] == 3
 
 
+def test_decode_serving_survives_churn_with_zero_cold_compiles():
+    """Continuous-batching paged decode under clone/kill churn: the page
+    pool is capacity-padded store state like params, so within-capacity
+    churn between generations recompiles nothing — and after the churn
+    round-trips (clone then kill the twin), greedy decode reproduces the
+    pre-churn tokens exactly. Lifecycle ops hold the scheduler's
+    step_lock so they never interleave with a step's pages checkout."""
+    from repro import configs
+    from repro.models import api
+    from repro.serve import serve_decode
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=64)
+    lm = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+    prompt = [3, 5, 7, 11, 13]
+    with PushDistribution(lm, num_devices=1, seed=0, capacity=4) as pd:
+        pids = [pd.p_create() for _ in range(2)]
+        svc = serve_decode(pd, cfg, num_pages=16, page_size=8,
+                           max_active=2, warmup_buckets=(8,))
+        try:
+            base = svc.generate(prompt, max_new=4)
+            cold = _cold()
+            gen = pd.store.generation()
+            with svc.scheduler.step_lock:          # churn vs decode steps
+                twin = pd.p_clone(pids[0], jitter=0.01)
+            widened = svc.generate(prompt, max_new=4)
+            assert len(widened.tokens) == 4        # BMA over 3 live rows
+            with svc.scheduler.step_lock:
+                pd.p_kill(twin)
+            back = svc.generate(prompt, max_new=4)
+            assert back.tokens == base.tokens      # live set restored
+            assert _cold() == cold, "decode churn must not recompile"
+            assert pd.store.generation() == gen
+            dec = pd.stats()["decode"]
+            assert dec["retired"] == 3
+            assert dec["pool"]["used_pages"] == 0
+        finally:
+            svc.close()
+
+
 def test_fused_training_after_churn_reuses_program():
     data = [_batch()]
     with DeepEnsemble(_module(), num_devices=1, seed=0,

@@ -147,6 +147,68 @@ def test_batcher_rejects_after_close():
         mb.submit({"x": jnp.zeros((1,))})
 
 
+def test_batcher_staging_buffers_one_h2d_per_flush():
+    """Flushes fill preallocated per-bucket staging buffers in place:
+    exactly one H2D per flush (h2d_transfers == batches), and a repeated
+    bucket reuses its buffer instead of allocating (np.stack) again."""
+    rec = _Recorder()
+    with MicroBatcher(rec, max_batch=4, max_wait_ms=5) as mb:
+        for round_ in range(3):
+            futs = [mb.submit({"x": jnp.full((2,), float(i))})
+                    for i in range(4)]
+            for f in futs:
+                f.wait(10.0)
+    st = mb.snapshot_stats()
+    assert st["h2d_transfers"] == st["batches"] == 3
+    assert st["staging_builds"] == 1          # one buffer set per bucket
+    assert st["staging_reuses"] == 2
+    # buffer reuse across flushes never leaked rows between batches
+    for round_, batch in enumerate(rec.batches):
+        assert np.allclose(np.asarray(batch["x"])[:, 0], [0, 1, 2, 3])
+
+
+def test_decode_scheduler_stats_surface():
+    """pd.stats() grows a 'decode' section while a DecodeScheduler serves
+    the store: active/queue/page-pool occupancy and the admission/retire/
+    preempt counters (asserted end-to-end in test_paged.py)."""
+    from repro import configs
+    from repro.models import api as models_api
+    from repro.serve import serve_decode
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=1, d_model=16, n_heads=2, n_kv_heads=1, head_dim=8,
+        d_ff=32, vocab_size=64, max_seq_len=64)
+    lm = ParticleModule(
+        init=lambda rng: models_api.init_params(rng, cfg),
+        loss=lambda p, b: models_api.loss_fn(p, b, cfg),
+        forward=lambda p, b: models_api.forward(p, b, cfg)[0], cfg=cfg)
+    with PushDistribution(lm, num_devices=1, seed=0) as pd:
+        pd.p_create()
+        assert "decode" not in pd.stats()      # no scheduler yet
+        svc = serve_decode(pd, cfg, num_pages=8, page_size=8,
+                           max_active=2, warmup=False)
+        try:
+            g = svc.generate([3, 5, 7], max_new=3)
+            assert len(g.tokens) == 3
+            dec = pd.stats()["decode"]
+            for k in ("active_seqs", "queue_depth", "admitted", "retired",
+                      "preempted", "steps", "prefills", "row_occupancy",
+                      "h2d_transfers"):
+                assert k in dec, k
+            assert dec["admitted"] == dec["retired"] == 1
+            assert dec["h2d_transfers"] == dec["steps"] + dec["prefills"]
+            pool = dec["pool"]
+            assert pool["free_pages"] == pool["num_pages"] == 8
+            assert pool["peak_used"] >= 1
+        finally:
+            svc.close()
+        # scheduler gone -> the section unregisters with it
+        import gc
+        del svc
+        gc.collect()
+        assert "decode" not in pd.stats()
+
+
 def test_bucket_and_pad_helpers():
     assert [bucket_size(m) for m in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
     t = {"a": jnp.arange(6.0).reshape(3, 2)}
