@@ -108,12 +108,15 @@ def _run_compiled(num_devices, arch, mod, data, n):
          f"devices={num_devices}")
 
 
-def _run_compiled_sharded(arch, mod, data, n):
+def _run_compiled_sharded(arch, mod, data, n, model: int = 1):
     """Paper Fig. 4 reproduced through the sharded compiled path: the
     particle axis of the store's stacked state sharded over a mesh across
-    every local device, the whole epoch as donated-buffer fused steps."""
+    every local device, the whole epoch as donated-buffer fused steps.
+    ``model > 1`` carves a model axis out of the device count (2D
+    particle x model placement, DESIGN.md §11) — tensor-parallel trailing
+    dims ride it while particles take the rest."""
     ndev = len(jax.devices())
-    placement = Placement(mesh=make_bench_mesh(ndev))
+    placement = Placement(mesh=make_bench_mesh(ndev, model=model))
     opt = adam(1e-3)
 
     with DeepEnsemble(mod, num_devices=1, backend="compiled",
@@ -161,7 +164,7 @@ def _run_baselines(num_devices, arch, mod, data, n):
 
 def run(num_devices: int = 1, particles=(1, 2, 4), num_batches: int = 3,
         workloads=("vit-mnist", "unet-advection", "qwen1.5-0.5b"),
-        backend: str = "nel"):
+        backend: str = "nel", model: int = 1):
     for arch in workloads:
         mod = tiny_module(arch)
         data = _data(mod.cfg, num_batches)
@@ -170,7 +173,7 @@ def run(num_devices: int = 1, particles=(1, 2, 4), num_batches: int = 3,
             if backend in ("compiled", "compiled-sharded"):
                 _run_compiled(num_devices, arch, mod, data, n)
             if backend == "compiled-sharded":  # the particle-scaling curve
-                _run_compiled_sharded(arch, mod, data, n)
+                _run_compiled_sharded(arch, mod, data, n, model=model)
             _run_baselines(num_devices, arch, mod, data, n)
 
 
@@ -182,8 +185,27 @@ def main():
     ap.add_argument("--backend",
                     choices=("nel", "compiled", "compiled-sharded"),
                     default="nel")
+    ap.add_argument("--model", type=int, default=1,
+                    help="model-axis size for the compiled-sharded rows "
+                         "(2D particle x model placement; must divide the "
+                         "device count). Implies --backend "
+                         "compiled-sharded when > 1")
+    ap.add_argument("--json", default="BENCH_scaling.json",
+                    help="where to persist the scaling rows when run "
+                         "standalone (benchmarks.run also writes this)")
     a = ap.parse_args()
-    run(a.devices, tuple(a.particles), a.batches, backend=a.backend)
+    backend = "compiled-sharded" if a.model > 1 else a.backend
+    print("name,us_per_call,derived")
+    run(a.devices, tuple(a.particles), a.batches, backend=backend,
+        model=a.model)
+    import json
+
+    from .util import ROWS
+    rows = [r for r in ROWS if r["name"].startswith("scaling/")]
+    with open(a.json, "w") as f:
+        json.dump({"devices": len(jax.devices()), "backend": backend,
+                   "model_axis": a.model, "rows": rows}, f, indent=1)
+    print(f"# wrote {len(rows)} scaling rows -> {a.json}", flush=True)
 
 
 if __name__ == "__main__":

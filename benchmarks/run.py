@@ -50,6 +50,9 @@ def main() -> None:
     ap.add_argument("--scaling-backend", default="nel",
                     choices=("nel", "compiled", "compiled-sharded"),
                     help="backend column set for the scaling section")
+    ap.add_argument("--scaling-model", type=int, default=1,
+                    help="model-axis size for the compiled-sharded scaling "
+                         "rows (2D particle x model placement)")
     ap.add_argument("--scaling-json", default="BENCH_scaling.json",
                     help="where to persist the scaling rows")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
@@ -67,7 +70,8 @@ def main() -> None:
                    bench_stress, util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
-                                     backend=args.scaling_backend),
+                                     backend=args.scaling_backend,
+                                     model=args.scaling_model),
         "depth_particles": bench_depth_particles.run,
         "stress": bench_stress.run,
         "accuracy": bench_accuracy.run,
@@ -90,6 +94,7 @@ def main() -> None:
         with open(args.scaling_json, "w") as f:
             json.dump({"devices": len(jax.devices()),
                        "backend": args.scaling_backend,
+                       "model_axis": args.scaling_model,
                        "rows": rows}, f, indent=1)
         print(f"# wrote {len(rows)} scaling rows -> {args.scaling_json}",
               flush=True)

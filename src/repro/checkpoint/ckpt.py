@@ -161,6 +161,7 @@ def save_store(ckpt_dir: str, step: int, store,
                         for s in range(store.capacity)],
         "placement": {
             "particle_axis": pl.particle_axis,
+            "model_axis": pl.model_axis,
             "mode": pl.mode,
             "mesh_shape": (None if pl.mesh is None
                            else [int(pl.mesh.shape[a])
@@ -218,12 +219,15 @@ def restore_store(ckpt_dir: str, step: Optional[int] = None,
         mesh = None
         if meta["mesh_shape"] is not None:
             n_want = int(np.prod(meta["mesh_shape"]))
-            if n_want <= len(jax.devices()):
+            n_have = len(jax.devices())
+            if n_want <= n_have and n_have % n_want == 0:
                 from ..launch.mesh import make_mesh
                 mesh = make_mesh(tuple(meta["mesh_shape"]),
                                  tuple(meta["mesh_axes"]))
         placement = Placement(mesh=mesh, particle_axis=meta["particle_axis"],
-                              mode=meta["mode"])
+                              mode=meta["mode"],
+                              # pre-2D checkpoints carry no model axis
+                              model_axis=meta.get("model_axis", "model"))
     pids = manifest["pids"]
     want_cap = capacity if capacity is not None \
         else manifest.get("capacity", len(pids))

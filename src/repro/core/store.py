@@ -64,33 +64,104 @@ from ..sharding import rules
 # placement plan
 # ---------------------------------------------------------------------------
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class Placement:
-    """Where particle state lives: a mesh + which mesh axis carries the
-    particle dimension. ``mesh=None`` (the default) keeps state wherever
-    jax puts it — the single-device fast path with no resharding cost."""
+    """The 2D placement plan: a ``(particle x model)`` mesh plus which
+    mesh axis carries which role. ``particle_axis`` shards the leading
+    stacked-particle dimension; ``model_axis`` shards *within* one
+    particle (tensor-parallel trailing dims via ``sharding/rules`` plus
+    the activation constraints of ``sharding/policy``), so a single
+    particle that does not fit on one chip spreads over the model axis.
+    ``mesh=None`` (the default) keeps state wherever jax puts it — the
+    single-device fast path with no resharding cost.
+
+    Equality / hashing are by *plan*, not object identity: two
+    placements over separately-built but identical meshes (same axis
+    names, sizes, and device order) compare equal, so re-placement onto
+    the same 2D plan is a 100% warm hit in the ProgramCache, while any
+    mesh-shape or mode change invalidates (the cache key embeds this
+    object directly)."""
     mesh: Any = None
     particle_axis: Optional[str] = "data"
     mode: str = "tp"  # within-particle sharding rules mode (sharding/rules)
+    model_axis: Optional[str] = "model"
+
+    # -- plan identity -------------------------------------------------------
+    def plan_key(self) -> tuple:
+        """Hashable value identity of the plan (what cache keys see)."""
+        if self.mesh is None:
+            mesh_key = None
+        else:
+            mesh_key = (tuple(self.mesh.axis_names),
+                        tuple(int(self.mesh.shape[a])
+                              for a in self.mesh.axis_names),
+                        tuple(int(d.id) for d in
+                              np.asarray(self.mesh.devices).flat))
+        return (mesh_key, self.particle_axis, self.model_axis, self.mode)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Placement):
+            return NotImplemented
+        return self.plan_key() == other.plan_key()
+
+    def __hash__(self) -> int:
+        return hash(self.plan_key())
 
     @staticmethod
-    def auto(particle_axis: str = "data", mode: str = "tp") -> "Placement":
-        """Mesh over all local devices, model axis 1 (particle-parallel)."""
-        from ..launch.mesh import make_bench_mesh
+    def auto(particle_axis: str = "data", mode: str = "tp",
+             model: Any = 1, *, params_bytes: Optional[int] = None,
+             device_memory_bytes: Optional[int] = None) -> "Placement":
+        """Mesh over all local devices. ``model`` sets the model-axis
+        size (particles get the remaining ``n_devices // model`` ways);
+        ``model="auto"`` picks the smallest model-axis size whose
+        per-device parameter shard fits the device memory budget, from
+        ``params_bytes`` (per-particle parameter bytes) vs the local
+        device's reported memory (``launch.mesh.pick_model_axis``) —
+        multi-host launches call this after ``launch.distributed
+        .initialize()`` so ``jax.devices()`` spans every process."""
+        from ..launch.mesh import make_bench_mesh, pick_model_axis
         n = len(jax.devices())
-        if n <= 1:
+        if model == "auto":
+            model = pick_model_axis(params_bytes or 0, n,
+                                    device_memory_bytes=device_memory_bytes)
+        model = int(model)
+        if n <= 1 and model <= 1:
             return Placement(mesh=None)
-        return Placement(mesh=make_bench_mesh(n), particle_axis=particle_axis,
-                         mode=mode)
+        return Placement(mesh=make_bench_mesh(n, model=model),
+                         particle_axis=particle_axis, mode=mode)
+
+    # -- axis sizes ----------------------------------------------------------
+    def _axis_size(self, axis: Optional[str]) -> int:
+        if self.mesh is None or axis is None:
+            return 1
+        return int(dict(self.mesh.shape).get(axis, 1))
+
+    def particle_axis_size(self) -> int:
+        return self._axis_size(self.particle_axis)
+
+    def model_axis_size(self) -> int:
+        return self._axis_size(self.model_axis)
 
     # -- sharding derivation -------------------------------------------------
     def shardings(self, stacked_tree):
         """NamedSharding tree for a stacked state pytree (leading particle
-        axis -> particle_axis, trailing dims -> sharding/rules)."""
+        axis -> particle_axis, trailing dims -> sharding/rules over the
+        model axis)."""
         if self.mesh is None:
             return None
         return rules.tree_shardings(self.mesh, stacked_tree, self.mode,
-                                    self.particle_axis)
+                                    self.particle_axis,
+                                    model_axis=self.model_axis)
+
+    def activation_policy(self) -> Optional[Dict[str, Any]]:
+        """The ``sharding/policy`` name -> PartitionSpec map fused
+        programs trace under (None when the plan has no model axis to
+        shard over — never constrain intermediates on particle-only
+        placements, where forcing replication would be pure overhead)."""
+        if self.mesh is None or self.model_axis_size() <= 1:
+            return None
+        from ..sharding.policy import tp_activation_policy
+        return tp_activation_policy(dict(self.mesh.shape), self.model_axis)
 
     def replicated(self, tree):
         """Fully-replicated shardings (batches: every particle sees the
@@ -103,7 +174,8 @@ class Placement:
     def _axis_fits(self, n: int, axis: Optional[str]) -> Optional[str]:
         if self.mesh is None or axis is None:
             return None
-        return axis if n % self.mesh.shape[axis] == 0 else None
+        size = dict(self.mesh.shape).get(axis)
+        return axis if size and n % size == 0 else None
 
     def vector(self, n: int):
         """Sharding for per-particle scalars stacked to (n,) (losses)."""
@@ -114,20 +186,22 @@ class Placement:
 
     def matrix(self, n: int, d: int):
         """Sharding for the flattened (n, D) particle-parameter matrix
-        (SVGD): particles over the particle axis, D over `model`."""
+        (SVGD): particles over the particle axis, D over the model axis."""
         if self.mesh is None:
             return None
         return NamedSharding(self.mesh,
                              P(self._axis_fits(n, self.particle_axis),
-                               self._axis_fits(d, "model")))
+                               self._axis_fits(d, self.model_axis)))
 
     def gathered_matrix(self, d: int):
         """Sharding of the (n, D) matrix *after* the all-gather over the
-        particle axis: every device holds all particles' rows (the SVGD
-        kernel matrix needs all-to-all), D still sharded over `model`."""
+        particle axis ONLY: every device holds all particles' rows (the
+        SVGD kernel matrix needs all-to-all), D still sharded over the
+        model axis — the collective never widens past the particle axis."""
         if self.mesh is None:
             return None
-        return NamedSharding(self.mesh, P(None, self._axis_fits(d, "model")))
+        return NamedSharding(self.mesh,
+                             P(None, self._axis_fits(d, self.model_axis)))
 
     def spmd_axis(self, n: int) -> Optional[str]:
         """vmap spmd_axis_name when the particle count divides the mesh
@@ -742,6 +816,31 @@ class ParticleStore:
                 if jax.tree.leaves(st):
                     self._stacked[key] = self._place(st)
             self._invalidate_mask()
+
+    def per_device_bytes(self, key: str = "params") -> int:
+        """Bytes of ``key``'s canonical state resident on ONE device
+        under the current placement — the headline number 2D placement
+        moves (a model axis of size m divides a replicated particle's
+        footprint by ~m, modulo non-divisible leaves). Reads whatever
+        form exists without flushing, placing, or bumping stats
+        counters; 0 when the store holds nothing for the key."""
+        def leaf_bytes(x):
+            sh = getattr(x, "sharding", None)
+            if sh is not None and hasattr(sh, "shard_shape"):
+                try:
+                    shard = sh.shard_shape(x.shape)
+                except Exception:
+                    return int(x.nbytes)
+                return int(np.prod(shard, dtype=np.int64)
+                           * np.dtype(x.dtype).itemsize)
+            return int(getattr(x, "nbytes", 0))
+        with self._lock:
+            tree = self._stacked.get(key)
+            if tree is None:
+                rows = self._rows.get(key, {})
+                return int(sum(leaf_bytes(l) for row in rows.values()
+                               for l in jax.tree.leaves(row)))
+            return int(sum(leaf_bytes(l) for l in jax.tree.leaves(tree)))
 
     def lifecycle_stats(self) -> Dict[str, int]:
         with self._lock:

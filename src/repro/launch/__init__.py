@@ -1,3 +1,4 @@
-# launch: production-mesh factories, run plans, step builders, dry-run CLI.
+# launch: production-mesh factories, multi-host bring-up, run plans,
+# step builders, dry-run CLI.
 # NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time.
-from . import mesh, plans
+from . import distributed, mesh, plans

@@ -516,6 +516,6 @@ def mlp_init(key, cfg, d_ff: Optional[int] = None):
 def mlp_apply(p, x, cfg):
     if "wi" in p:   # swiglu
         h = jax.nn.silu(dense_apply(p["wg"], x)) * dense_apply(p["wi"], x)
-        return dense_apply(p["wo"], h)
+        return dense_apply(p["wo"], maybe_shard(h, "mlp_hidden"))
     h = jax.nn.gelu(dense_apply(p["w1"], x))
-    return dense_apply(p["w2"], h)
+    return dense_apply(p["w2"], maybe_shard(h, "mlp_hidden"))

@@ -16,8 +16,16 @@ def _conv_init(key, k, cin, cout):
 
 
 def _conv(p, x, stride=1):
+    w = p["w"].astype(x.dtype)
+    if w.shape[0] == 1 and stride == 1:
+        # 1x1 conv as a per-position dense. vmap over the particle axis
+        # rewrites convs as grouped convs (feature_group_count = particles)
+        # and XLA's SPMD partitioner cannot split a grouped conv whose
+        # cout-per-group is 1 across a sharded particle axis; a matmul
+        # partitions cleanly and is numerically identical here.
+        return x @ w[0] + p["b"].astype(x.dtype)
     y = lax.conv_general_dilated(
-        x, p["w"].astype(x.dtype), window_strides=(stride,), padding="SAME",
+        x, w, window_strides=(stride,), padding="SAME",
         dimension_numbers=("NWC", "WIO", "NWC"))
     return y + p["b"].astype(x.dtype)
 

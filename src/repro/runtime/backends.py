@@ -74,14 +74,31 @@ class _BaseRuntime:
 
     def stats(self) -> Dict[str, Any]:
         ex = self.pd.nel.executor.stats()
+        pl = self.pd.placement
+        store_stats = self.pd.store.snapshot_stats()
         out = {
             "backend": self.name,
             "executor": ex,
             "dispatch": dict(self.pd.nel.stats),
-            "store": self.pd.store.snapshot_stats(),
+            "store": store_stats,
             "program_cache": self.cache.snapshot_stats(),
             "lifecycle": {**self.pd.store.lifecycle_stats(),
                           **getattr(self.pd, "lifecycle", {})},
+            # the 2D placement plan + its footprint: mesh shape, sharding
+            # mode, per-device parameter bytes (drops by ~model-axis size
+            # under tensor parallelism), and how often state was re-placed
+            "placement": {
+                "mesh_shape": (None if pl.mesh is None else
+                               {a: int(pl.mesh.shape[a])
+                                for a in pl.mesh.axis_names}),
+                "mode": pl.mode,
+                "particle_axis": pl.particle_axis,
+                "model_axis": pl.model_axis,
+                "model_axis_size": pl.model_axis_size(),
+                "per_device_param_bytes":
+                    self.pd.store.per_device_bytes("params"),
+                "reshards": store_stats["device_puts"],
+            },
         }
         # continuous-batching decode, when a DecodeScheduler serves this
         # store (lazy import: runtime must not depend on serve at module

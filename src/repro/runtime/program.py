@@ -82,13 +82,15 @@ def abstract_key(tree) -> Tuple:
 
 @dataclass(frozen=True)
 class BuildCtx:
-    """What ``ProgramSpec.make`` lowers against: the placement plan, the
-    particle count of the state being traced, and the resolved
+    """What ``ProgramSpec.make`` lowers against: the 2D placement plan,
+    the particle count of the state being traced, the resolved
     ``vmap(spmd_axis_name=...)`` (None off-mesh or when n does not divide
-    the mesh's particle axis)."""
+    the mesh's particle axis), and the model axis the trailing dims are
+    tensor-parallel over (None when the plan's model axis has size 1)."""
     placement: Placement
     num_particles: int
     spmd_axis: Optional[str]
+    model_axis: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -183,9 +185,26 @@ def lower(spec: ProgramSpec, placement: Optional[Placement], args,
     backends all compile through here (tests/test_runtime.py greps)."""
     placement = placement or Placement()
     n = _num_particles(spec, args)
+    model_axis = (placement.model_axis
+                  if placement.model_axis_size() > 1 else None)
     ctx = BuildCtx(placement=placement, num_particles=n,
-                   spmd_axis=placement.spmd_axis(n) if n else None)
+                   spmd_axis=placement.spmd_axis(n) if n else None,
+                   model_axis=model_axis)
     fn = spec.make(ctx)
+    policy = placement.activation_policy()
+    if policy is not None:
+        # enter the activation policy *inside* the traced body so every
+        # trace (first call AND shape-driven retraces) sees the model-axis
+        # constraints at the models' maybe_shard sites; the mesh context
+        # lets the bare-PartitionSpec constraints resolve against this
+        # placement's mesh (and composes with vmap's spmd-axis prepend)
+        from ..sharding.policy import activation_policy as _act
+        inner = fn
+
+        def fn(*call_args, __inner=inner, __pol=policy,
+               __mesh=placement.mesh):
+            with __mesh, _act(__pol):
+                return __inner(*call_args)
     kwargs = {}
     if spec.donate:
         kwargs["donate_argnums"] = spec.donate

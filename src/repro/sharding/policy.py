@@ -36,6 +36,34 @@ def activation_policy(policy: Dict[str, PartitionSpec]):
         _tls.policy = prev
 
 
+def tp_activation_policy(mesh_shape: Dict[str, int],
+                         model_axis: str = "model"
+                         ) -> Dict[str, PartitionSpec]:
+    """The Megatron-TP activation layout over a 2D (particle x model)
+    placement: attention/MLP/SSM intermediates stay sharded over the
+    model axis between the column-parallel (wq/wk/wv, wi/wg) and
+    row-parallel (wo, w2) matmuls instead of round-tripping replicated;
+    residuals are pinned replicated so the row-parallel psum happens at
+    the block boundary, exactly once.
+
+    Specs are per-particle ranks — under ``vmap(spmd_axis_name=...)``
+    JAX prepends the particle mesh axis automatically. ``__mesh__``
+    enables ``maybe_shard``'s divisibility drop, so head counts that do
+    not divide the model axis degrade to replicated instead of erroring.
+    """
+    m = model_axis
+    return {
+        "attn_heads": PartitionSpec(None, None, m, None),   # (B, S, H, hd)
+        "attn_kv":    PartitionSpec(None, None, m, None),   # (B, S, KVH, hd)
+        "ssm_heads":  PartitionSpec(None, None, m, None),   # (B, S, H, hd)
+        "mlp_hidden": PartitionSpec(None, None, m),         # (B, S, F)
+        "logits":     PartitionSpec(None, None, m),         # (B, S, V)
+        "moe_buffer": PartitionSpec(m, None, None),         # (E, C, D)
+        "residual":   PartitionSpec(None, None, None),      # (B, S, D)
+        "__mesh__":   dict(mesh_shape),
+    }
+
+
 def maybe_shard(x, name: str):
     pol = current_policy()
     if pol is None or name not in pol:

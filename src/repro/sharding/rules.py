@@ -44,6 +44,13 @@ _RULES = [
     (r"out_proj/w$",                 (None, None),           (None, "data")),
     (r"patch/w$",                    (None, None),           (None, None)),
     (r"head/w$",                     (None, None),           (None, None)),
+    # KV caches / paged KV pools (store keys "kv", "kv_pages"): leaves are
+    # literally "k" / "v" (param leaves end in /w, /b — no collision) with
+    # trailing dims (..., seq-or-page, n_kv_heads, head_dim). Heads ride
+    # the model axis alongside the wk/wv column split, so the paged-decode
+    # block-table gathers never cross the model axis.
+    (r"(^|/)(k|v)$",                 (None, None, "model", None),
+     (None, None, "model", None)),
 ]
 _COMPILED = [(re.compile(pat), tp, ftp) for pat, tp, ftp in _RULES]
 
@@ -63,14 +70,25 @@ def spec_tail(path_str: str, mode: str) -> Optional[Tuple]:
     return None
 
 
+def _remap_tail(tail: Tuple, model_axis: Optional[str]) -> Tuple:
+    """Rule tails name the within-particle axis literally `"model"`;
+    remap to the placement's actual model-axis name (or drop to None
+    when the plan has no model axis at all)."""
+    if model_axis == "model":
+        return tail
+    return tuple(model_axis if a == "model" else a for a in tail)
+
+
 def param_spec(path, ndim: int, mode: str, particle_axis: Optional[str],
-               shape=None, mesh_shape=None) -> P:
+               shape=None, mesh_shape=None,
+               model_axis: Optional[str] = "model") -> P:
     """Full PartitionSpec for one parameter leaf. When `shape`/`mesh_shape`
     are given, any axis whose dim is not divisible by its mesh-axis size is
     dropped to None (e.g. whisper's vocab 51865 on a 16-way model axis)."""
     tail = spec_tail(normalize_path(path), mode)
     if tail is None or len(tail) > ndim:
         tail = ()
+    tail = _remap_tail(tail, model_axis)
     lead_n = ndim - len(tail)
     lead = [None] * lead_n
     if particle_axis is not None and lead_n >= 1:
@@ -84,18 +102,20 @@ def param_spec(path, ndim: int, mode: str, particle_axis: Optional[str],
 
 
 def tree_param_specs(tree, mode: str, particle_axis: Optional[str] = None,
-                     mesh=None):
+                     mesh=None, model_axis: Optional[str] = "model"):
     """Pytree of PartitionSpecs matching `tree` (arrays or ShapeDtypeStructs)."""
     mesh_shape = dict(mesh.shape) if mesh is not None else None
     flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
     specs = [param_spec(path, len(leaf.shape), mode, particle_axis,
                         shape=leaf.shape if mesh is not None else None,
-                        mesh_shape=mesh_shape)
+                        mesh_shape=mesh_shape, model_axis=model_axis)
              for path, leaf in flat]
     return jax.tree_util.tree_unflatten(tdef, specs)
 
 
-def tree_shardings(mesh, tree, mode: str, particle_axis: Optional[str] = None):
-    specs = tree_param_specs(tree, mode, particle_axis, mesh=mesh)
+def tree_shardings(mesh, tree, mode: str, particle_axis: Optional[str] = None,
+                   model_axis: Optional[str] = "model"):
+    specs = tree_param_specs(tree, mode, particle_axis, mesh=mesh,
+                             model_axis=model_axis)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

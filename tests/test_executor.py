@@ -252,6 +252,20 @@ def test_nel_dispatch_uses_persistent_loops():
         assert lc["clones"] == 0 and lc["kills"] == 0
         assert lc["rebalances"] == 0
         assert lc["mask_invalidations"] >= 4     # one per registration
+        # ... and the placement section (the 2D plan + its footprint)
+        pl = full["placement"]
+        assert pl["mode"] == "tp" and pl["particle_axis"] == "data"
+        assert pl["model_axis"] == "model"
+        if pd.placement.mesh is None:
+            assert pl["mesh_shape"] is None
+            assert pl["model_axis_size"] == 1
+        else:
+            assert pl["mesh_shape"] == {
+                a: int(pd.placement.mesh.shape[a])
+                for a in pd.placement.mesh.axis_names}
+            assert pl["model_axis_size"] >= 1
+        assert pl["per_device_param_bytes"] > 0   # params are registered
+        assert pl["reshards"] == full["store"]["device_puts"]
         pd.p_kill(pids[-1])
         pd.p_clone(pids[0])
         lc2 = pd.stats()["lifecycle"]

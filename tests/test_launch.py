@@ -24,6 +24,52 @@ def tiny_mesh():
     return mesh_compat.make_mesh((1, 1), ("data", "model"))
 
 
+# ---------------------------------------------------------------------------
+# mesh factory validation (ISSUE-7 satellite): bad axis sizes raise a
+# clear ValueError, not a cryptic reshape/XLA error
+# ---------------------------------------------------------------------------
+
+def test_make_bench_mesh_rejects_non_divisible_model():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="does not divide"):
+        mesh_compat.make_bench_mesh(n, model=n + 1)
+    with pytest.raises(ValueError, match="positive"):
+        mesh_compat.make_bench_mesh(n, model=0)
+
+
+def test_make_mesh_rejects_oversized_shape():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        mesh_compat.make_mesh((n + 1,), ("data",))
+    with pytest.raises(ValueError, match="disagree"):
+        mesh_compat.make_mesh((1, 1), ("data",))
+    # valid submesh shapes still build (the 1x1 trace mesh everywhere)
+    assert tiny_mesh() is not None
+
+
+def test_make_bench_mesh_2d_axes():
+    n = len(jax.devices())
+    mesh = mesh_compat.make_bench_mesh(n, model=1)
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert int(mesh.shape["data"]) == n and int(mesh.shape["model"]) == 1
+
+
+def test_pick_model_axis_budget():
+    # no memory info / no params -> particle-parallel (model=1)
+    assert mesh_compat.pick_model_axis(0, 8) == 1
+    assert mesh_compat.pick_model_axis(100, 8, device_memory_bytes=None) == 1
+    # smallest divisor of n_devices whose shard fits fraction*memory
+    assert mesh_compat.pick_model_axis(
+        100, 8, device_memory_bytes=1000) == 1
+    assert mesh_compat.pick_model_axis(
+        1000, 8, device_memory_bytes=1000) == 2
+    assert mesh_compat.pick_model_axis(
+        2300, 8, device_memory_bytes=1000) == 4
+    # never fits: best effort = every device
+    assert mesh_compat.pick_model_axis(
+        10**9, 8, device_memory_bytes=1000) == 8
+
+
 @pytest.mark.parametrize("arch", sorted(configs.ARCHS))
 @pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
 def test_plans_are_coherent(arch, shape):

@@ -99,3 +99,91 @@ def test_advection_exact_shift(seed):
     from repro.data.synthetic import advection_batch
     b = advection_batch(np.random.default_rng(seed), 2, L=64, c=1.0, dt=4.0)
     assert np.allclose(np.roll(b["u0"], 4, axis=1), b["u1"])
+
+
+# ---------------------------------------------------------------------------
+# sharding/rules.param_spec laws (ISSUE-7 satellite): pure host-side
+# PartitionSpec construction — no mesh objects needed
+# ---------------------------------------------------------------------------
+
+_RULE_PATHS = [
+    ("mlp/wi/w", ("__none__", "model")),
+    ("attn/wq/w", ("__none__", "model")),
+    ("attn/wo/w", ("model", "__none__")),
+    ("embed", ("model", "__none__")),
+    ("lm_head/w", ("__none__", "model")),
+    ("units/0/k", ("__none__", "__none__", "model", "__none__")),
+]
+
+
+class _Path:
+    """Minimal key-path shim: rules.normalize_path(jax keystr) of
+    ['a']['b'] is 'a/b'; build the same string through real jax paths."""
+    def __new__(cls, s):
+        import jax
+        parts = s.split("/")
+        tree = leaf = object()
+        for p in reversed(parts):
+            tree = {p: tree}
+        flat = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: x is leaf)[0]
+        return flat[0][0]
+
+
+@settings(**SET)
+@given(extra_lead=st.integers(0, 3),
+       path_i=st.integers(0, len(_RULE_PATHS) - 1),
+       particle=st.booleans())
+def test_param_spec_pad_and_particle_prepend(extra_lead, path_i, particle):
+    """Tail length vs ndim: leading dims pad with None, the FIRST lead
+    dim carries the particle axis (when one exists), the tail stays
+    trailing-aligned; a tail longer than ndim degrades to lead-only."""
+    from repro.sharding.rules import param_spec, spec_tail
+    path_s, tail = _RULE_PATHS[path_i]
+    tail = tuple(None if t == "__none__" else t for t in tail)
+    assert spec_tail(path_s, "tp") == tail
+    ndim = len(tail) + extra_lead
+    axis = "data" if particle else None
+    spec = tuple(param_spec(_Path(path_s), ndim, "tp", axis))
+    assert len(spec) == ndim
+    if extra_lead >= 1:
+        assert spec[0] == axis
+        assert all(s is None for s in spec[1:extra_lead])
+        assert spec[extra_lead:] == tail
+    else:  # no room for the particle axis: tail occupies every dim
+        assert spec == tail
+    # tail longer than the array rank: rule drops, lead-only spec
+    short = tuple(param_spec(_Path(path_s), max(len(tail) - 1, 1), "tp",
+                             axis))
+    assert all(s in (axis, None) for s in short) and "model" not in short
+
+
+@settings(**SET)
+@given(vocab=st.sampled_from([51865, 51, 77, 128256]),
+       model_size=st.sampled_from([16, 32, 7]),
+       d=st.sampled_from([64, 96]))
+def test_param_spec_divisibility_drop(vocab, model_size, d):
+    """The whisper case: a vocab (or head count) that does not divide
+    the model-axis size degrades that dim to None without error, while
+    divisible dims keep their axis."""
+    from repro.sharding.rules import param_spec
+    mesh_shape = {"data": 2, "model": model_size}
+    spec = tuple(param_spec(_Path("lm_head/w"), 3, "tp", "data",
+                            shape=(2, d, vocab), mesh_shape=mesh_shape))
+    want_v = "model" if vocab % model_size == 0 else None
+    assert spec == ("data", None, want_v)
+    # the particle axis obeys the same law on the leading dim
+    spec2 = tuple(param_spec(_Path("lm_head/w"), 3, "tp", "data",
+                             shape=(3, d, vocab), mesh_shape=mesh_shape))
+    assert spec2[0] is None  # 3 % data=2 != 0
+
+
+@settings(**SET)
+@given(model_axis=st.sampled_from(["model", "tensor", None]))
+def test_param_spec_model_axis_remap(model_axis):
+    """Rule tails name the model axis literally; param_spec remaps it to
+    the placement's axis name (or drops it when the plan has none)."""
+    from repro.sharding.rules import param_spec
+    spec = tuple(param_spec(_Path("mlp/wi/w"), 3, "tp", "data",
+                            model_axis=model_axis))
+    assert spec == ("data", None, model_axis)

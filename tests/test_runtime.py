@@ -100,6 +100,47 @@ def test_placement_change_invalidates():
     assert cache.snapshot_stats()["hits"] == 1
 
 
+def test_replacement_same_2d_plan_is_100pct_warm_hit():
+    """ISSUE-7 acceptance: the cache invalidates on mesh-shape / mode
+    change and NOTHING else — re-placement onto the same 2D plan through
+    a separately-built (but identical) mesh is a pure warm hit."""
+    from repro.launch.mesh import make_bench_mesh
+    n = len(jax.devices())
+    m = 2 if n > 1 and n % 2 == 0 else 1
+    cache = ProgramCache()
+    spec = _double_spec()
+    st, b = jnp.ones((2, 3)), jnp.ones((4,))
+    cache.run(spec, st, b,
+              placement=Placement(mesh=make_bench_mesh(n, model=m)))
+    # same plan, rebuilt mesh object: 100% warm, zero recompiles
+    for _ in range(3):
+        cache.run(spec, st, b,
+                  placement=Placement(mesh=make_bench_mesh(n, model=m)))
+    s = cache.snapshot_stats()
+    assert s["cold_compiles"] == 1 and s["hits"] == 3, s
+    # mode change invalidates
+    cache.run(spec, st, b, placement=Placement(
+        mesh=make_bench_mesh(n, model=m), mode="fsdp_tp"))
+    assert cache.snapshot_stats()["cold_compiles"] == 2
+    if m == 2:  # mesh-shape change invalidates (needs >= 2 devices)
+        cache.run(spec, st, b,
+                  placement=Placement(mesh=make_bench_mesh(n, model=1)))
+        assert cache.snapshot_stats()["cold_compiles"] == 3
+
+
+def test_placement_plan_equality_and_hash():
+    """Placement equality is by plan value, not mesh object identity."""
+    from repro.launch.mesh import make_bench_mesh
+    n = len(jax.devices())
+    a = Placement(mesh=make_bench_mesh(n))
+    b = Placement(mesh=make_bench_mesh(n))
+    assert a == b and hash(a) == hash(b)
+    assert a != Placement(mesh=make_bench_mesh(n), mode="fsdp_tp")
+    assert a != Placement()                 # mesh vs no mesh
+    assert Placement() == Placement() and hash(Placement()) == \
+        hash(Placement())
+
+
 def test_state_token_invalidates():
     cache = ProgramCache()
     spec = _double_spec()
