@@ -36,6 +36,13 @@ a minimum hit rate via ``bench_compile --require-hit-rate``.
                                           serve latency under clone/kill
   bench_decode           (ours)           continuous-batching paged decode vs
                                           flush-batched (tok/s, p99, pages)
+  bench_obs              (ours)           tracing overhead on the dispatch
+                                          hot path (CI gates: disabled <=1%,
+                                          enabled <=5%)
+
+Obs rows land in ``BENCH_obs.json``; every BENCH_*.json additionally
+carries an ``obs`` context block (tracer/registry state + per-program
+FLOPs/bytes cost attribution from the global ProgramCache).
 """
 import argparse
 import functools
@@ -63,10 +70,12 @@ def main() -> None:
                     help="where to persist the churn rows")
     ap.add_argument("--decode-json", default="BENCH_decode.json",
                     help="where to persist the decode rows")
+    ap.add_argument("--obs-json", default="BENCH_obs.json",
+                    help="where to persist the tracing-overhead rows")
     args = ap.parse_args()
     from . import (bench_accuracy, bench_compile, bench_decode,
                    bench_depth_particles, bench_dispatch, bench_kernels,
-                   bench_lifecycle, bench_scaling, bench_serve,
+                   bench_lifecycle, bench_obs, bench_scaling, bench_serve,
                    bench_stress, util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
@@ -81,6 +90,7 @@ def main() -> None:
         "compile": bench_compile.run,
         "lifecycle": bench_lifecycle.run,
         "decode": bench_decode.run,
+        "obs": bench_obs.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
@@ -95,15 +105,15 @@ def main() -> None:
             json.dump({"devices": len(jax.devices()),
                        "backend": args.scaling_backend,
                        "model_axis": args.scaling_model,
-                       "rows": rows}, f, indent=1)
+                       "rows": rows, "obs": util.obs_context()}, f, indent=1)
         print(f"# wrote {len(rows)} scaling rows -> {args.scaling_json}",
               flush=True)
     if "serve" in only:
         import jax
         rows = [r for r in util.ROWS if r["name"].startswith("serve/")]
         with open(args.serve_json, "w") as f:
-            json.dump({"devices": len(jax.devices()), "rows": rows}, f,
-                      indent=1)
+            json.dump({"devices": len(jax.devices()), "rows": rows,
+                       "obs": util.obs_context()}, f, indent=1)
         print(f"# wrote {len(rows)} serve rows -> {args.serve_json}",
               flush=True)
     if "compile" in only:
@@ -113,24 +123,32 @@ def main() -> None:
         with open(args.runtime_json, "w") as f:
             json.dump({"devices": len(jax.devices()),
                        "cache": global_cache().snapshot_stats(),
-                       "rows": rows}, f, indent=1)
+                       "rows": rows, "obs": util.obs_context()}, f, indent=1)
         print(f"# wrote {len(rows)} compile rows -> {args.runtime_json}",
               flush=True)
     if "lifecycle" in only:
         import jax
         rows = [r for r in util.ROWS if r["name"].startswith("lifecycle/")]
         with open(args.lifecycle_json, "w") as f:
-            json.dump({"devices": len(jax.devices()), "rows": rows}, f,
-                      indent=1)
+            json.dump({"devices": len(jax.devices()), "rows": rows,
+                       "obs": util.obs_context()}, f, indent=1)
         print(f"# wrote {len(rows)} lifecycle rows -> {args.lifecycle_json}",
               flush=True)
     if "decode" in only:
         import jax
         rows = [r for r in util.ROWS if r["name"].startswith("decode/")]
         with open(args.decode_json, "w") as f:
-            json.dump({"devices": len(jax.devices()), "rows": rows}, f,
-                      indent=1)
+            json.dump({"devices": len(jax.devices()), "rows": rows,
+                       "obs": util.obs_context()}, f, indent=1)
         print(f"# wrote {len(rows)} decode rows -> {args.decode_json}",
+              flush=True)
+    if "obs" in only:
+        import jax
+        rows = [r for r in util.ROWS if r["name"].startswith("obs/")]
+        with open(args.obs_json, "w") as f:
+            json.dump({"devices": len(jax.devices()), "rows": rows,
+                       "obs": util.obs_context()}, f, indent=1)
+        print(f"# wrote {len(rows)} obs rows -> {args.obs_json}",
               flush=True)
 
 

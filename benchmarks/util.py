@@ -45,6 +45,18 @@ def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def obs_context() -> dict:
+    """Observability context attached to every BENCH_*.json artifact:
+    tracer/registry state plus per-program cost attribution for whatever
+    the global ProgramCache compiled during the run (compute=True pays
+    one analysis compile per entry — fine post-benchmark, off any timed
+    path)."""
+    from repro.obs import summary
+    from repro.runtime import global_cache
+    return {"obs": summary(),
+            "program_costs": global_cache().program_costs(compute=True)}
+
+
 def tiny_module(arch: str = "vit-mnist", n_units: int = 2,
                 d_model: int = 64) -> ParticleModule:
     cfg = configs.get(arch).smoke().replace(n_units=n_units, d_model=d_model,

@@ -102,6 +102,17 @@ def main():
             print(f"BMA drift after member swap: {drift:.4f} "
                   "(small: the clone is a jittered survivor)")
 
+        # 7. Observability — trace a request and open it in Perfetto
+        #    (DESIGN.md §12). Tracing is off by default and costs one
+        #    branch per dispatch until enabled.
+        from repro.obs import trace
+        trace.enable()
+        de.posterior_pred((xt, None))
+        pd.obs().dump_trace("/tmp/push_trace.json")
+        trace.disable()
+        print(f"traced {trace.TRACER.counts()['buffered']} spans "
+              "-> /tmp/push_trace.json (open in ui.perfetto.dev)")
+
 
 if __name__ == "__main__":
     main()

@@ -5,6 +5,7 @@ layer: ProgramSpec + process-wide ProgramCache + NelRuntime/
 CompiledRuntime) / bdl (inference algorithms) / serve (batched
 posterior-predictive serving) / models+configs (architecture zoo) /
 optim / data / checkpoint / kernels (Pallas TPU) / sharding+launch
-(multi-pod distribution).
+(multi-pod distribution) / obs (tracing, metrics, cost profiling,
+Perfetto + Prometheus export).
 """
 __version__ = "1.0.0"

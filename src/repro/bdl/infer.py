@@ -112,6 +112,21 @@ class Infer:
         return rt if isinstance(rt, CompiledRuntime) \
             else CompiledRuntime(self.push_dist, rt.cache)
 
+    @staticmethod
+    def _traced_epochs(epochs: int, label: str):
+        """Iterate ``range(epochs)``, bracketing each epoch's body (the
+        code between yields) in an obs ``bdl.epoch`` span plus a
+        ``jax.profiler.StepTraceAnnotation`` so device profiles show
+        per-epoch step markers. Free when tracing is off."""
+        from ..obs import trace as _trace
+        if not _trace.enabled():
+            yield from range(epochs)
+            return
+        for e in range(epochs):
+            with _trace.span("bdl.epoch", "bdl", algo=label, epoch=e), \
+                    jax.profiler.StepTraceAnnotation(label, step_num=e):
+                yield e
+
     def bayes_infer(self, dataloader, epochs: int, **kw):
         return self.push_dist.runtime.infer(self, dataloader, epochs, **kw)
 

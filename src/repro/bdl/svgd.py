@@ -284,7 +284,7 @@ class SteinVGD(Infer):
         co_pids, mask, slots = self._fused_plan(pids)
         prog, ls = None, None
         with self._checked_out(co_pids, ("params",)) as co:
-            for _ in range(epochs):
+            for _ in self._traced_epochs(epochs, "svgd"):
                 for batch in dataloader:
                     if prog is None:  # one cache lookup per fused run
                         prog = rt.program(spec, co["params"], batch, mask)

@@ -206,7 +206,7 @@ class MultiSWAG(Infer):
         step, collect, ls = None, None, None
         with self._checked_out(co_pids,
                                ("params", "opt_state", "swag")) as co:
-            for e in range(epochs):
+            for e in self._traced_epochs(epochs, "swag"):
                 for batch in dataloader:
                     if step is None:  # one cache lookup per fused run
                         step = rt.program(step_spec, co["params"],

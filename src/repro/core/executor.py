@@ -29,7 +29,12 @@ module replaces it with the paper's actual scheduler shape:
     rejects anything left so no waiter hangs.
 
 Dispatch statistics record counts, queue depths and wait-vs-run time —
-the quantities §5's scaling discussion reasons about.
+the quantities §5's scaling discussion reasons about. When ``obs.trace``
+is enabled, every run item additionally lands as an ``executor.run``
+span (with its mailbox-wait time) and every context-switched wait as
+``executor.mailbox_wait`` — timeline views of the same quantities. All
+timing goes through ``obs.clock`` (one timebase with the serving layer;
+benchmarks/bench_obs.py gates the overhead of the disabled path).
 
 The executor is deliberately jax-free: device residency is injected by
 the NEL as a ``device_prep(dev_idx, pid)`` callback, so the scheduler
@@ -38,10 +43,11 @@ is testable without accelerator state (tests/test_executor.py).
 from __future__ import annotations
 
 import threading
-import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
+from ..obs import clock
+from ..obs import trace as _trace
 from . import messages
 from .messages import PFuture
 
@@ -57,7 +63,7 @@ class _WorkItem:
         self.kwargs = kwargs
         self.future = future
         self.needs_device = needs_device
-        self.t_enqueue = time.perf_counter()
+        self.t_enqueue = clock.now()
 
 
 class _Mailbox:
@@ -91,11 +97,15 @@ class Executor:
     def __init__(self, num_devices: int, *,
                  device_prep: Optional[Callable[[int, int], None]] = None,
                  pool_size: Optional[int] = None,
-                 max_pending: int = 4096):
+                 max_pending: int = 4096,
+                 instrument: bool = True):
         if num_devices < 1:
             raise ValueError("need at least one device worker")
         self.num_devices = num_devices
         self.max_pending = max_pending
+        # instrument=False removes even the tracer's enabled-check from
+        # the run loop — the true baseline bench_obs measures against
+        self._trace = _trace.TRACER if instrument else None
         self._device_prep = device_prep
         self._queues = [_Queue(i) for i in range(num_devices)]
         self._pool_queue = _Queue(_POOL_QUEUE)
@@ -222,7 +232,7 @@ class Executor:
             return item
 
     def _run_item(self, q: _Queue, item: _WorkItem):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         # nested accounting: items run by the wait hook *inside* this item's
         # span charge their wall time to our `nested_s`, and we subtract it,
         # so run_time_s never double-counts context-switched work
@@ -234,10 +244,22 @@ class Executor:
             item.future._resolve(item.fn(*item.args, **item.kwargs))
         except BaseException as e:  # surfaced on wait()
             item.future._reject(e)
-        t1 = time.perf_counter()
+        t1 = clock.now()
         span = t1 - t0
         inner = self._tlocal.nested_s
         self._tlocal.nested_s = outer_nested + span
+        tr = self._trace
+        if tr is not None and tr.enabled:
+            # inlined Tracer.record (the ~10µs work items of the dispatch
+            # bench make a method call + get_ident measurable; the tid is
+            # cached per worker thread, the deque append is GIL-atomic)
+            tid = getattr(self._tlocal, "tid", None)
+            if tid is None:
+                tid = self._tlocal.tid = threading.get_ident()
+            tr._buf.append(("executor.run", "executor", t0, t1, tid,
+                            {"pid": item.pid, "queue": q.index,
+                             "wait_ms": (t0 - item.t_enqueue) * 1e3}))
+            tr._recorded += 1
         with q.cond:
             q.pending -= 1
             q.cond.notify_all()
@@ -253,8 +275,8 @@ class Executor:
     def _make_wait_hook(self, q: _Queue):
         """Context switch: run queued work while a future is outstanding."""
 
-        def hook(fut: PFuture, timeout: Optional[float]) -> bool:
-            deadline = None if timeout is None else time.monotonic() + timeout
+        def wait_loop(fut: PFuture, timeout: Optional[float]) -> bool:
+            deadline = None if timeout is None else clock.now() + timeout
 
             def wake():
                 with q.cond:
@@ -264,24 +286,37 @@ class Executor:
             while not fut.done():
                 if self._stop:
                     rem = (None if deadline is None
-                           else max(0.0, deadline - time.monotonic()))
+                           else max(0.0, deadline - clock.now()))
                     return fut._event.wait(rem)
                 # deadline is re-checked every iteration — including right
                 # after running an item — so a busy queue cannot starve the
                 # caller's timeout indefinitely
-                if deadline is not None and time.monotonic() >= deadline:
+                if deadline is not None and clock.now() >= deadline:
                     return fut.done()
                 rem = 0.1
                 if deadline is not None:
-                    rem = min(rem, max(0.0, deadline - time.monotonic()))
+                    rem = min(rem, max(0.0, deadline - clock.now()))
                 item = self._pop(q, rem)
                 if item is not None:
                     self._run_item(q, item)
             return True
 
+        def hook(fut: PFuture, timeout: Optional[float]) -> bool:
+            tr = self._trace
+            if tr is None or not tr.enabled:
+                return wait_loop(fut, timeout)
+            t0 = clock.now()
+            try:
+                return wait_loop(fut, timeout)
+            finally:
+                tr.record("executor.mailbox_wait", "executor", t0,
+                          clock.now(), {"queue": q.index})
+
         return hook
 
     def _worker(self, q: _Queue):
+        if self._trace is not None:
+            self._trace.name_track(threading.current_thread().name)
         messages._tls.wait_hook = self._make_wait_hook(q)
         while True:
             item = self._pop(q, 0.1)
@@ -295,12 +330,12 @@ class Executor:
     # ------------------------------------------------------------------
     def drain(self, timeout: Optional[float] = None):
         """Block until every submitted message has finished running."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else clock.now() + timeout
         with self._idle:
             while self._inflight > 0:
                 rem = 1.0
                 if deadline is not None:
-                    rem = deadline - time.monotonic()
+                    rem = deadline - clock.now()
                     if rem <= 0:
                         raise TimeoutError(
                             f"drain timed out with {self._inflight} in flight")

@@ -210,6 +210,19 @@ class PushDistribution:
         ProgramCache's hit/miss/cold-compile stats, in one dict."""
         return self.runtime.stats()
 
+    def obs(self):
+        """Observability handle (repro.obs): full snapshot (stats +
+        device gauges + per-program cost attribution), Chrome/Perfetto
+        trace dump, Prometheus text exposition.
+
+            from repro import obs
+            obs.trace.enable()           # start recording spans
+            ...workload...
+            pd.obs().dump_trace("trace.json")   # open in ui.perfetto.dev
+        """
+        from ..obs import Obs
+        return Obs(self)
+
     def serve(self, **kw):
         """Batched posterior-predictive service over this PD's store
         (repro.serve): fused BMA forward + uncertainty heads + adaptive

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..obs import trace as _trace
 from ..sharding import rules
 
 
@@ -366,6 +367,8 @@ class ParticleStore:
             self._stacked[key] = self._place(st)
         self._gen += 1
         self.stats["capacity_growths"] += 1
+        _trace.instant("store.generation_bump", "store",
+                       capacity=new_capacity, generation=self._gen)
         self._invalidate_mask()
 
     def slot_of(self, pid: int) -> int:
@@ -616,7 +619,8 @@ class ParticleStore:
                for x, s in zip(leaves, want_leaves)):
             return st                          # already placed (commit path)
         self.stats["device_puts"] += 1
-        return jax.device_put(st, want)
+        with _trace.span("store.h2d", "store", leaves=len(leaves)):
+            return jax.device_put(st, want)
 
     def stacked(self, key: str, pids: Optional[Sequence[int]] = None):
         """The canonical capacity-padded stacked pytree (flushing any
@@ -645,7 +649,7 @@ class ParticleStore:
         """Like ``stacked`` but transfers buffer ownership to the caller:
         the store drops its references so the fused loop may donate them
         to XLA. The caller must ``commit`` a result (or the original) back."""
-        with self._lock:
+        with _trace.span("store.checkout", "store", key=key), self._lock:
             sub = self._subset(pids)
             self.stats["checkouts"] += 1
             self._bump(key)
@@ -678,7 +682,7 @@ class ParticleStore:
         lazily (this is the *only* write-back of a multi-epoch fused run).
         Full commits carry the capacity-padded shape; with a pid subset,
         row i of `stacked` becomes pids[i]'s state."""
-        with self._lock:
+        with _trace.span("store.commit", "store", key=key), self._lock:
             sub = self._subset(pids)
             cohort = None if sub is not None \
                 else self._checkout_cohort.pop(key, None)

@@ -1,0 +1,103 @@
+"""obs.device — device-level gauges + per-Program cost attribution.
+
+Gauges answer the ROADMAP's HBM-budgeting questions: what does each
+device hold (``memory_stats`` — None on CPU backends, so every field is
+best-effort), how full is the store (capacity / live mask / per-device
+bytes per key), how full is a decode page pool.
+
+``program_cost`` is the attribution side: for one lowered ``Program`` it
+runs XLA's own ``compiled.cost_analysis()`` (FLOPs, bytes accessed) AND
+the repo's loop-aware HLO cost model (launch/hlo_cost.py — XLA counts a
+``while`` body once; the loop-aware model multiplies by trip count, which
+is what makes multi-epoch fused programs comparable). The analysis is an
+AOT ``lower().compile()`` over the program's abstract args — a second
+compile of the same HLO, paid once per program ON DEMAND and memoized on
+the Program (``Program.cost()``), never on a dispatch path: JAX's AOT
+path does not share the jit wrapper's dispatch cache, so doing this
+eagerly at ``lower()`` time would double every cold compile.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+_MEM_KEYS = ("bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+             "largest_alloc_size")
+
+
+def device_gauges() -> List[Dict[str, Any]]:
+    """One entry per local device. Memory fields are None where the
+    backend exposes no allocator stats (CPU)."""
+    out = []
+    for d in jax.local_devices():
+        try:
+            ms = d.memory_stats()
+        except Exception:
+            ms = None
+        entry: Dict[str, Any] = {"id": int(d.id), "platform": d.platform,
+                                 "kind": d.device_kind}
+        for k in _MEM_KEYS:
+            entry[k] = int(ms[k]) if ms and k in ms else None
+        out.append(entry)
+    return out
+
+
+def store_gauges(store) -> Dict[str, Any]:
+    """Store occupancy as the autoscaler wants it: capacity, live count,
+    the live-slot mask (host-side), and per-device resident bytes for
+    every key under the current placement."""
+    lc = store.lifecycle_stats()
+    live = set(store.live_slots())
+    return {
+        "capacity": lc["capacity"],
+        "live": lc["live"],
+        "free_slots": lc["free_slots"],
+        "generation": lc["generation"],
+        "live_mask": [1 if s in live else 0 for s in range(lc["capacity"])],
+        "per_device_bytes": {k: store.per_device_bytes(k)
+                             for k in store.keys()},
+    }
+
+
+def pool_gauges(pool) -> Dict[str, Any]:
+    """Page-pool occupancy (paged KV decode)."""
+    return pool.snapshot_stats()
+
+
+def _cost_dict(ca) -> Dict[str, float]:
+    # cost_analysis() returns a list of per-computation dicts on current
+    # JAX (one per module); older versions return the dict directly
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def program_cost(program) -> Optional[Dict[str, Any]]:
+    """Full cost attribution for one lowered Program; None for programs
+    without abstract args (AOT-preloaded blobs). Prefer the memoizing
+    ``Program.cost()`` over calling this directly."""
+    if program.abstract_args is None:
+        return None
+    compiled = program.fn.lower(*program.abstract_args).compile()
+    out: Dict[str, Any] = _cost_dict(compiled.cost_analysis())
+    out["param_bytes_per_device"] = program.param_bytes_per_device
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+        }
+    except Exception:
+        out["memory"] = None
+    try:
+        from ..launch.hlo_cost import cost as hlo_cost
+        lc = hlo_cost(compiled.as_text())
+        out["loop_aware"] = {"flops": lc["flops"], "bytes": lc["bytes"],
+                             "collectives": lc.get("coll", {})}
+    except Exception:   # cost model is best-effort on exotic HLO
+        out["loop_aware"] = None
+    return out

@@ -25,6 +25,7 @@ from typing import Any, Dict, Optional, Protocol, runtime_checkable
 
 import jax
 
+from ..obs import summary as _obs_summary
 from .cache import ProgramCache, global_cache
 from .program import ProgramSpec
 from . import specs
@@ -99,6 +100,9 @@ class _BaseRuntime:
                     self.pd.store.per_device_bytes("params"),
                 "reshards": store_stats["device_puts"],
             },
+            # tracer + metric-registry state (repro.obs): is tracing on,
+            # how many spans recorded/buffered/dropped, ring capacity
+            "obs": _obs_summary(),
         }
         # continuous-batching decode, when a DecodeScheduler serves this
         # store (lazy import: runtime must not depend on serve at module

@@ -31,9 +31,10 @@ import json
 import os
 import threading
 from collections import OrderedDict
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.store import Placement
+from ..obs import trace as _trace
 from .program import Program, ProgramSpec, abstract_key, lower
 
 
@@ -90,13 +91,18 @@ class ProgramCache:
             if prog is not None:
                 self._programs.move_to_end(key)
                 self.stats["hits"] += 1
+                _trace.instant("cache.hit", "runtime", program=spec.name)
                 return prog, True
             self.stats["misses"] += 1
+            _trace.instant("cache.miss", "runtime", program=spec.name)
             pre = self._preloaded.pop(key, None)
             if pre is not None:
                 self._insert(key, pre)
                 return pre, False
-        built = lower(spec, placement, args, cache_key=key)
+        # the cold compile happens OUTSIDE the lock; the span brackets
+        # trace + jit dispatch-cache population for this key
+        with _trace.span("runtime.lower", "runtime", program=spec.name):
+            built = lower(spec, placement, args, cache_key=key)
         with self._lock:
             prog = self._programs.get(key)
             if prog is None:
@@ -135,6 +141,22 @@ class ProgramCache:
             total = s["hits"] + s["misses"]
             s["hit_rate"] = s["hits"] / total if total else 0.0
             return s
+
+    def program_costs(self, compute: bool = False) -> List[Dict[str, Any]]:
+        """Per-entry cost attribution (obs.device): name, key
+        fingerprint, particle count, eager per-device param bytes, and —
+        when already analyzed or ``compute=True`` — the FLOPs/bytes
+        ``Program.cost()`` dict (compute forces one analysis compile per
+        not-yet-analyzed entry; AOT-preloaded entries stay None)."""
+        with self._lock:
+            items = list(self._programs.items())
+        return [{
+            "name": prog.name,
+            "fingerprint": _key_fingerprint(key),
+            "num_particles": prog.num_particles,
+            "param_bytes_per_device": prog.param_bytes_per_device,
+            "cost": prog.cost() if compute else prog.cost_if_computed(),
+        } for key, prog in items]
 
     def clear(self):
         with self._lock:

@@ -38,8 +38,11 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.store import Placement
+from ..obs import clock
+from ..obs.trace import TRACER as _TRACER
 
 IN_KINDS = ("state", "replicated", "vector", "rows")
 
@@ -115,22 +118,59 @@ class ProgramSpec:
 
 class Program:
     """A lowered + jitted program, ready to execute. ``__call__`` is the
-    hot path; everything else is introspection / AOT export support."""
+    hot path; everything else is introspection / AOT export support.
+
+    Cost attribution (DESIGN.md §12): ``param_bytes_per_device`` is
+    computed eagerly at ``lower()`` time (pure sharding arithmetic, no
+    compile); ``cost()`` — FLOPs, bytes accessed, loop-aware HLO model —
+    runs an AOT analysis compile ON DEMAND and memoizes it, because
+    JAX's AOT path does not share the jit wrapper's dispatch cache and
+    eager analysis would double every cold compile."""
 
     __slots__ = ("fn", "name", "cache_key", "num_particles",
-                 "abstract_args", "donate")
+                 "abstract_args", "donate", "param_bytes_per_device",
+                 "_cost")
 
     def __init__(self, fn, name, cache_key, num_particles, abstract_args,
-                 donate):
+                 donate, param_bytes_per_device: int = 0):
         self.fn = fn
         self.name = name
         self.cache_key = cache_key
         self.num_particles = num_particles
         self.abstract_args = abstract_args   # ShapeDtypeStruct trees
         self.donate = donate
+        self.param_bytes_per_device = param_bytes_per_device
+        self._cost = None
 
     def __call__(self, *args):
-        return self.fn(*args)
+        tr = _TRACER
+        if not tr.enabled:
+            return self.fn(*args)
+        # tracing on: the fused dispatch gets an obs span AND a
+        # jax.profiler named scope, so device-side profiles (perfetto
+        # via jax.profiler.trace) line up with the host timeline
+        t0 = clock.now()
+        with jax.profiler.TraceAnnotation(f"repro.program.{self.name}"):
+            out = self.fn(*args)
+        tr.record(f"program.{self.name}", "runtime", t0, clock.now(),
+                  {"n": self.num_particles})
+        return out
+
+    def cost(self):
+        """Memoized cost attribution dict (flops / bytes_accessed /
+        param_bytes_per_device / memory / loop_aware); None for
+        AOT-preloaded programs (no abstract args) or when the analysis
+        fails. First call pays one analysis compile."""
+        if self._cost is None:
+            from ..obs.device import program_cost
+            try:
+                self._cost = program_cost(self)
+            except Exception:
+                return None
+        return self._cost
+
+    def cost_if_computed(self):
+        return self._cost
 
     def __repr__(self) -> str:
         return f"Program({self.name!r}, n={self.num_particles})"
@@ -157,6 +197,31 @@ def _in_sharding(kind: str, arg, placement: Placement, n: int):
     if kind == "rows":
         return jax.tree.map(lambda _: placement.vector(n), arg)
     raise ValueError(kind)
+
+
+def _param_bytes_per_device(spec: ProgramSpec, args, in_shs) -> int:
+    """Bytes of the first "state" argument resident on ONE device under
+    the lowering's input shardings — the per-program analogue of
+    ``store.per_device_bytes``, captured at compile time (no mesh: the
+    whole tree lives on the one device)."""
+    for i, (kind, a) in enumerate(zip(spec.in_kinds, args)):
+        if kind != "state":
+            continue
+        leaves = jax.tree.leaves(a)
+        shs = (jax.tree.leaves(in_shs[i]) if in_shs is not None
+               else [None] * len(leaves))
+        total = 0
+        for x, sh in zip(leaves, shs):
+            shape = tuple(jnp.shape(x))
+            if sh is not None and hasattr(sh, "shard_shape"):
+                try:
+                    shape = sh.shard_shape(shape)
+                except Exception:
+                    pass
+            total += int(np.prod(shape, dtype=np.int64)
+                         * np.dtype(jnp.result_type(x)).itemsize)
+        return total
+    return 0
 
 
 def _out_shardings(spec: ProgramSpec, in_shs, placement: Placement, n: int):
@@ -206,6 +271,7 @@ def lower(spec: ProgramSpec, placement: Optional[Placement], args,
             with __mesh, _act(__pol):
                 return __inner(*call_args)
     kwargs = {}
+    in_shs = None
     if spec.donate:
         kwargs["donate_argnums"] = spec.donate
     if placement.mesh is not None:
@@ -219,4 +285,6 @@ def lower(spec: ProgramSpec, placement: Optional[Placement], args,
     abstract = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
         tuple(args))
-    return Program(jitted, spec.name, cache_key, n, abstract, spec.donate)
+    return Program(jitted, spec.name, cache_key, n, abstract, spec.donate,
+                   param_bytes_per_device=_param_bytes_per_device(
+                       spec, args, in_shs))

@@ -52,6 +52,8 @@ import numpy as np
 
 from ..core.executor import Executor
 from ..core.messages import PFuture
+from ..obs import clock, metrics
+from ..obs import trace as _trace
 from .engine import bucket_size
 
 _LAT_RING = 4096
@@ -63,7 +65,7 @@ class _Request:
     def __init__(self, x, future: PFuture):
         self.x = x
         self.future = future
-        self.t_enqueue = time.monotonic()
+        self.t_enqueue = clock.now()
 
 
 class _Staging:
@@ -130,7 +132,11 @@ class MicroBatcher:
         self._pending: deque = deque()
         self._pump_scheduled = False
         self._closed = False
-        self._latencies: deque = deque(maxlen=_LAT_RING)
+        # per-request enqueue->resolve latency: an obs.metrics Histogram
+        # (same ring bound as the old hand-rolled deque, one percentile
+        # implementation for the whole serving layer)
+        self.latency = metrics.Histogram("serve_request_latency_seconds",
+                                         ring=_LAT_RING)
         self._staging = _Staging()
         self.stats: Dict[str, Any] = {
             "requests": 0, "batches": 0, "rows": 0, "padded_rows": 0,
@@ -172,7 +178,7 @@ class MicroBatcher:
                 deadline = self._pending[0].t_enqueue + self.max_wait
                 while (not self._closed
                        and len(self._pending) < self.max_batch):
-                    rem = deadline - time.monotonic()
+                    rem = deadline - clock.now()
                     if rem <= 0:
                         break
                     self._cond.wait(rem)
@@ -196,18 +202,20 @@ class MicroBatcher:
         self.stats["rows"] += len(reqs)
         try:
             bucket = bucket_size(len(reqs))
-            padded = self._staging.batch([r.x for r in reqs], bucket)
-            self.stats["padded_rows"] += bucket - len(reqs)
-            # the staging buffer is the ONE host->device transfer of the
-            # flush (asserted by test_serve: h2d_transfers == batches)
-            self.stats["h2d_transfers"] += 1
-            # one host transfer for the whole result tree; per-request
-            # rows are then free numpy slices (n lazy device slices
-            # would each pay a dispatch)
-            result = jax.device_get(self.predict_fn(padded))
-            now = time.monotonic()
+            with _trace.span("serve.flush", "serve", reason=reason,
+                             rows=len(reqs), bucket=bucket):
+                padded = self._staging.batch([r.x for r in reqs], bucket)
+                self.stats["padded_rows"] += bucket - len(reqs)
+                # the staging buffer is the ONE host->device transfer of
+                # the flush (asserted: h2d_transfers == batches)
+                self.stats["h2d_transfers"] += 1
+                # one host transfer for the whole result tree; per-request
+                # rows are then free numpy slices (n lazy device slices
+                # would each pay a dispatch)
+                result = jax.device_get(self.predict_fn(padded))
+            now = clock.now()
             for i, r in enumerate(reqs):
-                self._latencies.append(now - r.t_enqueue)
+                self.latency.observe(now - r.t_enqueue)
                 r.future._resolve(
                     jax.tree.map(lambda a, i=i: a[i], result))
         except BaseException as e:       # surfaced on each request's wait()
@@ -221,8 +229,7 @@ class MicroBatcher:
             return len(self._pending)
 
     def latencies_s(self) -> List[float]:
-        with self._cond:
-            return list(self._latencies)
+        return self.latency.values()
 
     def snapshot_stats(self) -> Dict[str, Any]:
         with self._cond:
@@ -298,7 +305,7 @@ class _Seq:
         self.logprobs: List[float] = []
         self.entropy: List[float] = []
         self.mutual_info: List[float] = []
-        self.t_enqueue = time.monotonic()
+        self.t_enqueue = clock.now()
         self.preemptions = 0
 
     @property
@@ -390,7 +397,10 @@ class DecodeScheduler:
         self._pump_scheduled = False
         self._closed = False
         self._next_sid = 0
-        self._latencies: deque = deque(maxlen=_LAT_RING)
+        # submit->retire latency per sequence (obs.metrics Histogram,
+        # same ring bound as the old hand-rolled deque)
+        self.latency = metrics.Histogram("decode_request_latency_seconds",
+                                         ring=_LAT_RING)
         # fixed-shape decode staging buffer: [:, 0] token, [:, 1] seq_len,
         # [:, 2:] block table — refilled in place, ONE H2D per step
         self._packed = np.zeros((max_active, 2 + self.n_pmax), np.int32)
@@ -494,15 +504,16 @@ class DecodeScheduler:
         active = [(i, s) for i, s in enumerate(self._rows) if s is not None]
         if not active:
             return
-        self._packed[:, 0] = 0
-        self._packed[:, 1] = -1
-        self._packed[:, 2:] = 0
-        for i, seq in active:
-            self._packed[i, 0] = seq.all_tokens[-1]
-            self._packed[i, 1] = len(seq.all_tokens) - 1
-            self.pool.fill_block_row(seq.sid, self._packed[i, 2:])
-        self.stats["h2d_transfers"] += 1
-        heads = jax.device_get(self.engine.decode_step(self._packed))
+        with _trace.span("decode.step", "decode", rows=len(active)):
+            self._packed[:, 0] = 0
+            self._packed[:, 1] = -1
+            self._packed[:, 2:] = 0
+            for i, seq in active:
+                self._packed[i, 0] = seq.all_tokens[-1]
+                self._packed[i, 1] = len(seq.all_tokens) - 1
+                self.pool.fill_block_row(seq.sid, self._packed[i, 2:])
+            self.stats["h2d_transfers"] += 1
+            heads = jax.device_get(self.engine.decode_step(self._packed))
         self.stats["steps"] += 1
         self.stats["active_row_steps"] += len(active)
         for i, seq in active:
@@ -539,6 +550,8 @@ class DecodeScheduler:
                 continue
             self._rows[row] = seq
             self.stats["admitted"] += 1
+            _trace.instant("decode.admit", "decode", sid=seq.sid,
+                           replay=bool(seq.generated))
             if not seq.generated:
                 # the prefill head IS the first generated token; replays
                 # discard it (greedy ⇒ it equals the token already held)
@@ -555,14 +568,17 @@ class DecodeScheduler:
     def _prefill(self, seq: _Seq, n_pf: int):
         tokens = seq.all_tokens[:n_pf]
         bucket = bucket_size(n_pf)
-        buf = self._prefill_buf(bucket)
-        buf[:n_pf] = tokens
-        buf[n_pf:bucket] = 0
-        self.pool.fill_block_row(seq.sid, buf[bucket:bucket + self.n_pmax])
-        buf[-1] = n_pf
-        self.stats["prefills"] += 1
-        self.stats["h2d_transfers"] += 1
-        return jax.device_get(self.engine.prefill(buf))
+        with _trace.span("decode.prefill", "decode", sid=seq.sid,
+                         tokens=n_pf, bucket=bucket):
+            buf = self._prefill_buf(bucket)
+            buf[:n_pf] = tokens
+            buf[n_pf:bucket] = 0
+            self.pool.fill_block_row(seq.sid,
+                                     buf[bucket:bucket + self.n_pmax])
+            buf[-1] = n_pf
+            self.stats["prefills"] += 1
+            self.stats["h2d_transfers"] += 1
+            return jax.device_get(self.engine.prefill(buf))
 
     def _ensure_page(self, seq: _Seq) -> bool:
         """Make the page for ``seq``'s next write position resident;
@@ -572,6 +588,8 @@ class DecodeScheduler:
         while len(self.pool.pages_of(seq.sid)) < need:
             if self.pool.alloc(seq.sid,
                                need - len(self.pool.pages_of(seq.sid))):
+                _trace.instant("decode.grow", "decode", sid=seq.sid,
+                               pages=need)
                 return True
             victim = max((s for s in self._rows if s is not None),
                          key=lambda s: s.sid)
@@ -586,6 +604,8 @@ class DecodeScheduler:
         self.pool.release(seq.sid)
         seq.preemptions += 1
         self.stats["preempted"] += 1
+        _trace.instant("decode.preempt", "decode", sid=seq.sid,
+                       tokens=len(seq.all_tokens))
         with self._cond:
             self._waiting.appendleft(seq)
 
@@ -602,7 +622,10 @@ class DecodeScheduler:
         self._rows[row] = None
         self.pool.release(seq.sid)
         self.stats["retired"] += 1
-        self._latencies.append(time.monotonic() - seq.t_enqueue)
+        self.latency.observe(clock.now() - seq.t_enqueue)
+        _trace.instant("decode.retire", "decode", sid=seq.sid,
+                       tokens=len(seq.generated),
+                       reason=seq.finish_reason() or "length")
         seq.future._resolve(seq.result())
 
     def _fail_all(self, e: BaseException):
@@ -628,8 +651,7 @@ class DecodeScheduler:
         return sum(1 for s in self._rows if s is not None)
 
     def latencies_s(self) -> List[float]:
-        with self._cond:
-            return list(self._latencies)
+        return self.latency.values()
 
     def snapshot_stats(self) -> Dict[str, Any]:
         with self._cond:

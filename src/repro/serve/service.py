@@ -15,14 +15,12 @@ and p50/p95/p99 request latency from the batcher's ring buffer.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-import numpy as np
-
 from ..core.messages import PFuture
 from ..core.store import Placement
+from ..obs import clock, metrics
 from .batcher import DecodeScheduler, Generation, MicroBatcher
 from .engine import PagedDecodeEngine, PredictiveEngine
 from .paging import PagePool, create_kv_pages
@@ -64,11 +62,10 @@ class PendingPrediction:
 
 
 def percentile(xs: List[float], q: float) -> float:
-    """Linear-interpolated percentile (np.percentile; q in [0, 100]);
-    0.0 on empty input. bench_serve reports these same values."""
-    if not xs:
-        return 0.0
-    return float(np.percentile(np.asarray(xs), q))
+    """Linear-interpolated percentile (q in [0, 100]); 0.0 on empty
+    input. Delegates to the one implementation in ``repro.obs.metrics``
+    (bench_serve reports these same values)."""
+    return metrics.percentile(xs, q)
 
 
 class PredictiveService:
@@ -78,7 +75,7 @@ class PredictiveService:
         self.batcher = MicroBatcher(engine.predict, max_batch=max_batch,
                                     max_wait_ms=max_wait_ms,
                                     max_queue=max_queue)
-        self._t_start = time.monotonic()
+        self._t_start = clock.now()
 
     # -- request paths -------------------------------------------------------
     def predict_async(self, x) -> PendingPrediction:
@@ -97,15 +94,15 @@ class PredictiveService:
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        lat = self.batcher.latencies_s()
+        lat = self.batcher.latency          # obs.metrics Histogram view
         bstats = self.batcher.snapshot_stats()
-        elapsed = max(time.monotonic() - self._t_start, 1e-9)
+        elapsed = max(clock.now() - self._t_start, 1e-9)
         return {
             **bstats,
             "engine": self.engine.snapshot_stats(),
-            "latency_p50_ms": percentile(lat, 50) * 1e3,
-            "latency_p95_ms": percentile(lat, 95) * 1e3,
-            "latency_p99_ms": percentile(lat, 99) * 1e3,
+            "latency_p50_ms": lat.percentile(50) * 1e3,
+            "latency_p95_ms": lat.percentile(95) * 1e3,
+            "latency_p99_ms": lat.percentile(99) * 1e3,
             "requests_per_s": bstats["requests"] / elapsed,
         }
 
@@ -182,7 +179,7 @@ class DecodeService:
         self.scheduler = scheduler
         self.engine = scheduler.engine
         self.pool = scheduler.pool
-        self._t_start = time.monotonic()
+        self._t_start = clock.now()
 
     # -- request paths -------------------------------------------------------
     def generate_async(self, prompt, *, max_new: int,
@@ -199,15 +196,15 @@ class DecodeService:
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        lat = self.scheduler.latencies_s()
+        lat = self.scheduler.latency        # obs.metrics Histogram view
         sstats = self.scheduler.snapshot_stats()
-        elapsed = max(time.monotonic() - self._t_start, 1e-9)
+        elapsed = max(clock.now() - self._t_start, 1e-9)
         return {
             **sstats,
             "engine": self.engine.snapshot_stats(),
-            "latency_p50_ms": percentile(lat, 50) * 1e3,
-            "latency_p95_ms": percentile(lat, 95) * 1e3,
-            "latency_p99_ms": percentile(lat, 99) * 1e3,
+            "latency_p50_ms": lat.percentile(50) * 1e3,
+            "latency_p95_ms": lat.percentile(95) * 1e3,
+            "latency_p99_ms": lat.percentile(99) * 1e3,
             "tokens_per_s": sstats["generated_tokens"] / elapsed,
         }
 

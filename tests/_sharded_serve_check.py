@@ -15,7 +15,12 @@ Asserts, for a PredictiveService over a 4-device mesh placement:
      under the mesh too: repeated identical requests and a SECOND
      service over the same store trigger zero cold compiles while
      ``store.version()`` is unchanged.
+
+When ``REPRO_TRACE_OUT`` is set, the whole run executes with obs tracing
+enabled and dumps a Perfetto-loadable Chrome trace-event JSON to that
+path on success (CI uploads it as an artifact from both sharded jobs).
 """
+import json
 import os
 import sys
 
@@ -65,6 +70,10 @@ def check_sharded(store, key):
 def main():
     assert len(jax.devices()) == N_DEV, \
         f"need {N_DEV} forced host devices, got {len(jax.devices())}"
+    trace_out = os.environ.get("REPRO_TRACE_OUT")
+    if trace_out:
+        from repro.obs import trace
+        trace.enable()
     placement = Placement(mesh=make_bench_mesh(N_DEV), particle_axis="data",
                           mode="tp")
     x = jax.random.normal(jax.random.PRNGKey(5), (16, 3))
@@ -230,6 +239,19 @@ def main():
             assert dec["pool"]["used_pages"] == 0, dec
         finally:
             svc.close()
+
+    if trace_out:
+        from repro.obs import export
+        export.dump_chrome_trace(trace_out)
+        with open(trace_out) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        assert evs, "trace dump produced no events"
+        assert any(e["ph"] == "X" for e in evs), "no duration spans in trace"
+        cats = {e.get("cat") for e in evs if e["ph"] in ("X", "i")}
+        assert {"runtime", "serve", "decode"} <= cats, \
+            f"trace missing expected categories: {cats}"
+        print(f"perfetto trace: {len(evs)} events -> {trace_out}")
 
     print(f"parity {err:.2e}, stacked state untouched across requests "
           f"({N_DEV} devices), heads replicated, stateful state sharded, "
