@@ -1,0 +1,156 @@
+"""Mixed-precision particles: HBM per particle, particles-per-device
+headroom, remat-policy activation footprint, serve throughput delta.
+
+The PR acceptance bar: the "bf16" preset (bf16 masters, so params AND
+adam moments store at half width) must show >= 1.8x lower resident
+params+opt bytes per particle than fp32, measured off a REAL trained
+store's leaf dtypes (``store.per_particle_bytes``), not an itemsize
+guess. On top of that the bench reports the planning consequence — how
+many live particles fit a fixed synthetic device budget for a deep
+transformer config (``models.api.param_footprint``), which is exactly
+the number ``Placement.auto(model="auto")`` sizes against — plus the
+remat-policy menu's compiled temp-buffer footprint and the fp32 vs bf16
+serve-path latency on a BMA predict engine.
+
+Rows:
+  precision/hbm/{fp32,bf16}          per-particle params+opt bytes
+  precision/hbm/ratio                fp32/bf16 (gate: >= 1.8)
+  precision/fit/{fp32,bf16}          live particles per synthetic 2 GiB
+                                     device budget, deep config
+  precision/remat/{policy}           compiled train-step temp bytes
+  precision/serve/{fp32,mixed}       us per BMA predict (8-batch)
+
+``python -m benchmarks.run --only precision`` persists the rows to
+BENCH_precision.json; ``python -m benchmarks.bench_precision
+--require-bytes-ratio 1.8`` enforces the memory bar (CI, both sharded
+matrix jobs).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.bdl import DeepEnsemble
+from repro.core.precision import get as get_precision
+from repro.data.synthetic import mnist_like
+from repro.models import api
+from repro.optim import adam
+from repro.serve import PredictiveEngine
+
+from .util import emit, timeit, tiny_module
+
+PARTICLES = 4
+BUDGET_BYTES = 2 << 30          # synthetic per-device budget for /fit rows
+DEEP_ARCH = "qwen1.5-0.5b"      # eval_shape only: never allocated
+
+
+def _lm_batch(cfg, m=4, seed=0):
+    tok = jax.random.randint(jax.random.PRNGKey(seed), (m, 16), 0,
+                             cfg.vocab_size)
+    return {"tokens": tok, "labels": tok}
+
+
+def _store_bytes(precision):
+    """Train a small ensemble one epoch so params AND opt_state are
+    resident store keys, then read the per-particle bytes off the actual
+    leaf dtypes."""
+    mod = tiny_module()
+    data = [mnist_like(np.random.default_rng(0), 8)]
+    with DeepEnsemble(mod, num_devices=1, backend="compiled", seed=0,
+                      precision=precision) as de:
+        de.bayes_infer(data, 1, optimizer=adam(1e-3),
+                       num_particles=PARTICLES)
+        store = de.store
+        return sum(store.per_particle_bytes(k)
+                   for k in ("params", "opt_state"))
+
+
+def _remat_temp_bytes(policy):
+    """Temp-buffer bytes of one compiled train step for a deeper config
+    under a named remat policy (AOT memory_analysis; None off CPU-less
+    backends)."""
+    cfg = configs.get(DEEP_ARCH).replace(
+        n_units=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=256, vocab_size=256, max_seq_len=64, remat=False,
+        remat_policy=policy)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _lm_batch(cfg, m=2, seed=1)
+
+    def step(p):
+        return jax.value_and_grad(lambda q: api.loss_fn(q, batch, cfg)[0])(p)
+
+    try:
+        compiled = jax.jit(step).lower(params).compile()
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def run(require_bytes_ratio=None):
+    # -- headline: resident params+opt bytes per particle ------------------
+    per = {}
+    for name in ("fp32", "bf16"):
+        per[name] = _store_bytes(name)
+        emit(f"precision/hbm/{name}", float(per[name]),
+             f"params+opt_bytes_per_particle;master="
+             f"{get_precision(name).master}")
+    ratio = per["fp32"] / per["bf16"]
+    emit("precision/hbm/ratio", ratio, "fp32_over_bf16")
+
+    # -- planning consequence: particles per device budget, deep config ----
+    for name in ("fp32", "bf16"):
+        fp = api.param_footprint(configs.get(DEEP_ARCH), name)
+        fit = BUDGET_BYTES // fp
+        emit(f"precision/fit/{name}", float(fit),
+             f"particles_per_{BUDGET_BYTES >> 30}GiB;"
+             f"param_bytes={fp}")
+
+    # -- remat-policy menu: compiled temp footprint ------------------------
+    base = None
+    for policy in (None, "dots_saveable", "nothing_saveable"):
+        tb = _remat_temp_bytes(policy)
+        label = policy or "none"
+        if tb is None:
+            emit(f"precision/remat/{label}", 0.0, "memory_analysis_n/a")
+            continue
+        if base is None:
+            base = tb
+        emit(f"precision/remat/{label}", float(tb),
+             f"train_step_temp_bytes;x_vs_none={base / max(tb, 1):.2f}")
+
+    # -- serve path: fp32 vs bf16-compute BMA predict latency --------------
+    probe = {"images": mnist_like(np.random.default_rng(3), 8)["images"]}
+    for name in ("fp32", "mixed"):
+        mod = tiny_module()
+        with DeepEnsemble(mod, num_devices=1, backend="compiled", seed=0,
+                          precision=name) as de:
+            de.bayes_infer([mnist_like(np.random.default_rng(0), 8)], 1,
+                           optimizer=adam(1e-3), num_particles=PARTICLES)
+            eng = PredictiveEngine(mod.forward, store=de.store,
+                                   kind="classify")
+            us = timeit(lambda: eng.predict(probe)["mean"], iters=5)
+            emit(f"precision/serve/{name}", us,
+                 f"req_per_s={1e6 / us:.1f};serve={get_precision(name).serve}")
+
+    if require_bytes_ratio is not None and ratio < require_bytes_ratio:
+        raise SystemExit(
+            f"per-particle params+opt bytes fp32/bf16 = {ratio:.2f}x "
+            f"< required {require_bytes_ratio:.1f}x")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--require-bytes-ratio", type=float, default=None,
+                    help="fail unless fp32/bf16 per-particle params+opt "
+                         "bytes >= this (acceptance: 1.8)")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(require_bytes_ratio=a.require_bytes_ratio)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,10 @@ a minimum hit rate via ``bench_compile --require-hit-rate``.
   bench_obs              (ours)           tracing overhead on the dispatch
                                           hot path (CI gates: disabled <=1%,
                                           enabled <=5%)
+  bench_precision        (ours)           mixed-precision particles: HBM per
+                                          particle, remat-policy temp bytes,
+                                          serve latency (CI gate: fp32/bf16
+                                          params+opt bytes >= 1.8x)
 
 Obs rows land in ``BENCH_obs.json``; every BENCH_*.json additionally
 carries an ``obs`` context block (tracer/registry state + per-program
@@ -72,11 +76,13 @@ def main() -> None:
                     help="where to persist the decode rows")
     ap.add_argument("--obs-json", default="BENCH_obs.json",
                     help="where to persist the tracing-overhead rows")
+    ap.add_argument("--precision-json", default="BENCH_precision.json",
+                    help="where to persist the mixed-precision rows")
     args = ap.parse_args()
     from . import (bench_accuracy, bench_compile, bench_decode,
                    bench_depth_particles, bench_dispatch, bench_kernels,
-                   bench_lifecycle, bench_obs, bench_scaling, bench_serve,
-                   bench_stress, util)
+                   bench_lifecycle, bench_obs, bench_precision,
+                   bench_scaling, bench_serve, bench_stress, util)
     table = {
         "scaling": functools.partial(bench_scaling.run,
                                      backend=args.scaling_backend,
@@ -91,6 +97,7 @@ def main() -> None:
         "lifecycle": bench_lifecycle.run,
         "decode": bench_decode.run,
         "obs": bench_obs.run,
+        "precision": bench_precision.run,
     }
     only = set(args.only.split(",")) if args.only else set(table)
     print("name,us_per_call,derived")
@@ -149,6 +156,14 @@ def main() -> None:
             json.dump({"devices": len(jax.devices()), "rows": rows,
                        "obs": util.obs_context()}, f, indent=1)
         print(f"# wrote {len(rows)} obs rows -> {args.obs_json}",
+              flush=True)
+    if "precision" in only:
+        import jax
+        rows = [r for r in util.ROWS if r["name"].startswith("precision/")]
+        with open(args.precision_json, "w") as f:
+            json.dump({"devices": len(jax.devices()), "rows": rows,
+                       "obs": util.obs_context()}, f, indent=1)
+        print(f"# wrote {len(rows)} precision rows -> {args.precision_json}",
               flush=True)
 
 

@@ -102,7 +102,22 @@ def main():
             print(f"BMA drift after member swap: {drift:.4f} "
                   "(small: the clone is a jittered survivor)")
 
-        # 7. Observability — trace a request and open it in Perfetto
+        # 7. Mixed precision — one flag (DESIGN.md §13). "mixed" keeps
+        #    fp32 masters in the store and traces bf16 compute inside
+        #    the SAME fused step; "bf16" halves params+opt memory per
+        #    particle. The store reports bytes off actual leaf dtypes.
+        from repro.obs.device import store_gauges
+
+        with DeepEnsemble(module, backend="compiled",
+                          precision="bf16") as de16:
+            de16.bayes_infer([(x, y)], 300, optimizer=adam(1e-2),
+                             num_particles=4)
+            g16, g32 = (store_gauges(d.store) for d in (de16, de))
+            print(f"\nbf16 particles: {g16['per_particle_bytes']['params']}"
+                  f" B/particle vs fp32 {g32['per_particle_bytes']['params']}"
+                  f" B (master={g16['precision']['master']})")
+
+        # 8. Observability — trace a request and open it in Perfetto
         #    (DESIGN.md §12). Tracing is off by default and costs one
         #    branch per dispatch until enabled.
         from repro.obs import trace

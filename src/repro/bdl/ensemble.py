@@ -44,7 +44,8 @@ class DeepEnsemble(Infer):
         benchmarks so the timed region is exactly the backend="compiled"
         epoch path."""
         rt = self._compiled_runtime()
-        spec = specs.ensemble_step(self.module.loss, optimizer)
+        spec = specs.ensemble_step(self.module.loss, optimizer,
+                                   precision=self.precision)
         co_pids, mask, slots = self._fused_plan(pids)
         prog, ls = None, None
         with self._checked_out(co_pids, ("params", "opt_state")) as co:

@@ -29,16 +29,31 @@ import jax
 from ..core import ParticleModule, Placement, PushDistribution
 
 
+def _init_shapes(module):
+    """Abstract per-particle param tree (eval_shape: no FLOPs, no
+    memory) for policy-aware ``Placement.auto`` sizing; None when the
+    module's init cannot be traced abstractly."""
+    try:
+        return jax.eval_shape(module.init, jax.random.PRNGKey(0))
+    except Exception:
+        return None
+
+
 class Infer:
     def __init__(self, module: ParticleModule, *, num_devices: int = 1,
                  cache_size: int = 4, view_size: int = 4, seed: int = 0,
                  backend: str = "nel",
                  placement: Optional[Union[Placement, str]] = None,
-                 capacity: int = 0):
+                 capacity: int = 0, precision=None):
         self.module = module
         self.num_devices = num_devices
         if placement == "auto":
-            placement = Placement.auto()
+            # policy-aware sizing: the model axis is picked against the
+            # MASTER-dtype per-particle bytes, so a bf16 store does not
+            # reserve 2x the model shards it needs
+            placement = Placement.auto(
+                model="auto", precision=precision,
+                param_tree=_init_shapes(module))
         # capacity preallocates store slots so a planned lifecycle
         # (bayes_infer then lifecycle.grow) never pays a growth recompile
         self.push_dist = PushDistribution(module, num_devices=num_devices,
@@ -46,11 +61,16 @@ class Infer:
                                           view_size=view_size, seed=seed,
                                           backend=backend,
                                           placement=placement,
-                                          capacity=capacity)
+                                          capacity=capacity,
+                                          precision=precision)
 
     @property
     def backend(self) -> str:
         return self.push_dist.backend
+
+    @property
+    def precision(self):
+        return self.push_dist.precision
 
     @property
     def placement(self) -> Placement:

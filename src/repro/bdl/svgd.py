@@ -104,7 +104,8 @@ def svgd_force(theta, grads, lengthscale: float, use_kernel: bool = False,
 
 def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
                     use_kernel: bool = False, placement=None,
-                    num_particles: Optional[int] = None):
+                    num_particles: Optional[int] = None,
+                    compute_dtype=None):
     """One compiled SVGD step over stacked particles.
 
     With a mesh placement the per-particle backward pass is distributed
@@ -121,7 +122,16 @@ def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
                    in_axes=(0, None), spmd_axis_name=spmd)
 
     def step(stacked_params, batch, mask=None):
-        losses, grads = vag(stacked_params, batch)
+        if compute_dtype is not None:
+            # backward pass in the compute dtype; the kernel force below
+            # is fp32 regardless (theta32/g32), and the update lands back
+            # in the master dtype via new_theta = theta - ...
+            from ..core.precision import cast_floats
+            losses, grads = vag(cast_floats(stacked_params, compute_dtype),
+                                cast_floats(batch, compute_dtype))
+            losses = losses.astype(jnp.float32)
+        else:
+            losses, grads = vag(stacked_params, batch)
         theta, unravel = functional.flatten_stacked(stacked_params)
         g, _ = functional.flatten_stacked(grads)
         theta32 = theta.astype(jnp.float32)
@@ -154,17 +164,27 @@ def fused_svgd_step(loss_fn, *, lr: float, lengthscale: float = 1.0,
 
 
 def svgd_step_spec(loss_fn, *, lr: float, lengthscale: float = 1.0,
-                   use_kernel: bool = False):
+                   use_kernel: bool = False, precision=None):
     """ProgramSpec for the fused SVGD step: stacked params sharded over
     the particle axis and donated across the epoch loop; the kernel
-    matrix's all-to-all stays an on-device all-gather (fused_svgd_step)."""
+    matrix's all-to-all stays an on-device all-gather (fused_svgd_step).
+
+    ``precision`` (None | preset name | Precision) selects the compute
+    dtype of the per-particle backward pass; the kernel force is fp32
+    either way. The policy is folded into ``ProgramSpec.precision`` —
+    the compute cast is traced over the same master inputs, so abstract
+    dtypes alone cannot distinguish the programs."""
+    from ..core import precision as precision_mod
     from ..runtime import ProgramSpec, ident
+    prec = precision_mod.get(precision)
+    cd = prec.compute if prec.casts_compute else None
 
     def make(ctx):
         return fused_svgd_step(
             loss_fn, lr=lr, lengthscale=lengthscale, use_kernel=use_kernel,
             placement=ctx.placement,
-            num_particles=ctx.num_particles or None)
+            num_particles=ctx.num_particles or None,
+            compute_dtype=cd)
 
     return ProgramSpec(
         name="svgd_step",
@@ -173,12 +193,14 @@ def svgd_step_spec(loss_fn, *, lr: float, lengthscale: float = 1.0,
         make=make,
         in_kinds=("state", "replicated", "replicated"),
         out_kinds=("in:0", "vector"),
-        donate=(0,))
+        donate=(0,),
+        precision=prec.key() if prec.casts_compute else None)
 
 
 def compile_svgd_step(loss_fn, placement, stacked, batch, mask=None, *,
                       lr: float, lengthscale: float = 1.0,
-                      use_kernel: bool = False, state_token=None):
+                      use_kernel: bool = False, state_token=None,
+                      precision=None):
     """The fused SVGD step against a placement plan, lowered and cached
     by the shared ProgramCache (runtime layer). Pass
     ``mask=store.active_mask()`` for the capacity-padded masked program
@@ -186,7 +208,7 @@ def compile_svgd_step(loss_fn, placement, stacked, batch, mask=None, *,
     programs the Runtime lowered against that store."""
     from ..runtime import global_cache
     spec = svgd_step_spec(loss_fn, lr=lr, lengthscale=lengthscale,
-                          use_kernel=use_kernel)
+                          use_kernel=use_kernel, precision=precision)
     args = (stacked, batch) + (() if mask is None else (mask,))
     return global_cache().program(spec, placement, args, state_token)
 
@@ -280,7 +302,8 @@ class SteinVGD(Infer):
                       lr: float = 1e-3, lengthscale: float = 1.0):
         rt = self._compiled_runtime()
         spec = svgd_step_spec(self.module.loss, lr=lr,
-                              lengthscale=lengthscale)
+                              lengthscale=lengthscale,
+                              precision=self.precision)
         co_pids, mask, slots = self._fused_plan(pids)
         prog, ls = None, None
         with self._checked_out(co_pids, ("params",)) as co:

@@ -198,7 +198,11 @@ class MultiSWAG(Infer):
         committed back once at the end."""
         from ..runtime import specs
         rt = self._compiled_runtime()
-        step_spec = specs.ensemble_step(self.module.loss, optimizer)
+        # the SWAG moments follow the master dtype automatically
+        # (zeros_like of the cast params); only the train step carries
+        # the compute-cast split
+        step_spec = specs.ensemble_step(self.module.loss, optimizer,
+                                        precision=self.precision)
         collect_spec = specs.map_step(_swag_collect_fused,
                                       key=("swag_collect",), n_state=2,
                                       masked=True)

@@ -111,6 +111,19 @@ def _rebuild(skel, arrays):
     return arrays[skel["i"]]
 
 
+# npz cannot round-trip extension dtypes (bfloat16 is an ml_dtypes
+# registration, not a native numpy descr) without pickling; such leaves
+# are stored widened to fp32 and the manifest records the true dtype so
+# restore_store re-casts them back exactly.
+_NPZ_NATIVE = frozenset(
+    "bool int8 int16 int32 int64 uint8 uint16 uint32 uint64 "
+    "float16 float32 float64 complex64 complex128".split())
+
+
+def _npz_savable(arr: np.ndarray) -> np.ndarray:
+    return arr if arr.dtype.name in _NPZ_NATIVE else arr.astype(np.float32)
+
+
 def save_store(ckpt_dir: str, step: int, store,
                keys: Optional[List[str]] = None) -> str:
     """Write a ParticleStore — every key's *live* rows (dense, in slot
@@ -141,10 +154,17 @@ def save_store(ckpt_dir: str, step: int, store,
             continue
         flat: List[Any] = []
         skels[key] = _skeleton(st, flat)
+        dtypes = []
         for i, leaf in enumerate(flat):
-            arrays[f"k{ki}_l{i}"] = np.asarray(leaf)
+            arr = np.asarray(leaf)
+            dtypes.append(arr.dtype.name)
+            arrays[f"k{ki}_l{i}"] = _npz_savable(arr)
         skels[key]["_slot"] = ki
         skels[key]["_pids"] = pids_k
+        # per-leaf dtypes (flat order): the precision ladder's restore
+        # contract — a bf16 store round-trips as bf16 even though the
+        # npz payload is widened (see _npz_savable)
+        skels[key]["_dtypes"] = dtypes
     pl = store.placement
     # slot layout recorded for forensics/tooling; restore_store re-derives
     # its own layout from the pids' saved (slot) order, so these three
@@ -169,6 +189,12 @@ def save_store(ckpt_dir: str, step: int, store,
             "mesh_axes": (None if pl.mesh is None
                           else list(pl.mesh.axis_names)),
         },
+        # the precision policy the store ran under + the dtype surface
+        # each key actually held — restore revives the policy by default
+        "precision": (store.precision.describe()
+                      if getattr(store, "precision", None) is not None
+                      else None),
+        "dtypes": {k: store.key_dtypes(k) for k in skels},
         "keys": skels,
     }
     path = os.path.join(ckpt_dir, f"store_{step:08d}.npz")
@@ -189,8 +215,8 @@ def latest_store_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore_store(ckpt_dir: str, step: Optional[int] = None,
-                  placement=None, capacity: Optional[int] = None
-                  ) -> Tuple[int, Any]:
+                  placement=None, capacity: Optional[int] = None,
+                  precision=None) -> Tuple[int, Any]:
     """Rebuild a ready-to-serve ParticleStore from ``save_store`` output.
 
     Returns (step, store): pids re-registered (slot order preserved),
@@ -204,7 +230,16 @@ def restore_store(ckpt_dir: str, step: Optional[int] = None,
     active mask and free-slot list re-derive from the new slot layout.
     ``placement``: an explicit Placement wins; None tries to revive the
     saved plan (a mesh of the saved shape when the local device count
-    matches, else single-device)."""
+    matches, else single-device).
+
+    Precision (DESIGN.md §13): leaves restore at their saved dtypes (the
+    manifest records them; npz payloads for extension dtypes like bf16
+    are widened on disk). ``precision=`` overrides the saved policy and
+    RE-CASTS master state on load — a fp32 checkpoint restores straight
+    into a bf16 store and vice versa; kv scratch keys follow the
+    policy's ``kv_dtype`` instead of the master dtype."""
+    from ..core.precision import Precision, cast_floats
+    from ..core.precision import get as _resolve_precision
     from ..core.store import ParticleStore, Placement
 
     if step is None:
@@ -228,10 +263,19 @@ def restore_store(ckpt_dir: str, step: Optional[int] = None,
                               mode=meta["mode"],
                               # pre-2D checkpoints carry no model axis
                               model_axis=meta.get("model_axis", "model"))
+    saved_prec = manifest.get("precision")
+    if precision is None and saved_prec is not None:
+        precision = Precision(master_dtype=saved_prec["master"],
+                              compute_dtype=saved_prec["compute"],
+                              serve_dtype=saved_prec["serve"],
+                              serve_quant=saved_prec.get("serve_quant"),
+                              kv_dtype=saved_prec.get("kv"))
+    prec = _resolve_precision(precision)
     pids = manifest["pids"]
     want_cap = capacity if capacity is not None \
         else manifest.get("capacity", len(pids))
-    store = ParticleStore(placement, capacity=max(want_cap, len(pids)))
+    store = ParticleStore(placement, capacity=max(want_cap, len(pids)),
+                          precision=prec)
     for pid in pids:          # saved slot order -> same relative layout
         store.register(pid)
     for key, skel in manifest["keys"].items():
@@ -239,10 +283,22 @@ def restore_store(ckpt_dir: str, step: Optional[int] = None,
         arrays = []
         while f"k{ki}_l{len(arrays)}" in data:
             arrays.append(data[f"k{ki}_l{len(arrays)}"])
+        dts = skel.get("_dtypes")
+        if dts:   # undo the on-disk widening of extension dtypes (bf16)
+            arrays = [a if a.dtype.name == d
+                      else jax.numpy.asarray(a).astype(jax.numpy.dtype(d))
+                      for a, d in zip(arrays, dts)]
         tree = _rebuild(skel, arrays)
         if tree is None:
             continue
         tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        # the policy's master re-cast (fp32 <-> bf16, both directions);
+        # kv scratch keys track kv_dtype, never the master dtype
+        if key.startswith("kv"):
+            if prec.kv_dtype is not None:
+                tree = cast_floats(tree, prec.kv_dtype)
+        else:
+            tree = cast_floats(tree, prec.master)
         pids_k = skel.get("_pids", pids)
         # per-pid row writes (not a full commit): the saved rows are
         # dense while the new store's capacity may differ from the saved

@@ -83,6 +83,15 @@ class ModelConfig:
     dtype: str = "float32"           # compute dtype for smokes; dry-run uses bf16
     param_dtype: str = "float32"     # bf16 for the largest archs in the dry run
     remat: bool = False              # checkpoint the scanned layer body
+    # named jax.checkpoint policy for the scanned unit (core.precision
+    # .checkpoint_policy menu: "nothing_saveable", "dots_saveable",
+    # "dots_with_no_batch_dims", ...). Overrides the boolean `remat`
+    # flag; None + remat=True keeps the legacy full-remat behaviour.
+    remat_policy: Optional[str] = None
+    # default store precision preset ("fp32" | "mixed" | "bf16" |
+    # "mixed_int8") picked up by PushDistribution when no explicit
+    # precision is passed; None -> "fp32"
+    precision: Optional[str] = None
     optimizer: str = "adam"          # adam | adafactor | sgd
     # particle-parallelism default (the paper's technique) per input shape
     default_particles: int = 1

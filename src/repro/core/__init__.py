@@ -6,10 +6,13 @@
 # messages.py  — PFuture / ParticleView (async-await + read-only views)
 # store.py     — ParticleStore: mesh-sharded stacked state, lazy views
 # functional.py— compiled stacked-particle fast path (the "compiled" backend)
+# precision.py — Precision policy: fp32 masters / bf16 compute / int8 serve
 from .executor import Executor
 from .messages import PFuture, ParticleView, resolved, snapshot
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
 from .pd import BACKENDS, PushDistribution
+from .precision import Precision
 from .store import ParticleStore, Placement, StoreState
 from . import functional
+from . import precision

@@ -97,16 +97,34 @@ def ensemble_value_and_grad(loss_fn: Callable,
 
 
 def ensemble_step(loss_fn: Callable, optimizer,
-                  spmd_axis_name: Optional[str] = None):
+                  spmd_axis_name: Optional[str] = None,
+                  compute_dtype=None):
     """One compiled train step for all particles: grads + optimizer update.
 
     ``mask=None`` is the dense form; with a (capacity,) active mask, dead
     slots keep their params/opt state bit-for-bit (frozen padding rows)
-    and report loss 0.0."""
+    and report loss 0.0.
+
+    ``compute_dtype`` is the mixed-precision split (DESIGN.md §13): the
+    loss/grad pass runs on a *traced* cast of the masters (and of the
+    batch's float leaves), gradients are cast back per-leaf to each
+    master's dtype, and the optimizer update applies against the fp32
+    masters — all inside this one donated program, so the compute copy
+    never exists as a store key, never costs an H2D, and never bumps the
+    generation. ``None`` keeps the default path bit-identical to the
+    pre-policy code."""
     vag = ensemble_value_and_grad(loss_fn, spmd_axis_name)
 
     def step(stacked_params, stacked_opt_state, batch, mask=None):
-        losses, grads = vag(stacked_params, batch)
+        if compute_dtype is not None:
+            from .precision import cast_floats
+            losses, grads = vag(cast_floats(stacked_params, compute_dtype),
+                                cast_floats(batch, compute_dtype))
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                 grads, stacked_params)
+            losses = losses.astype(jnp.float32)
+        else:
+            losses, grads = vag(stacked_params, batch)
         new_p, new_s = jax.vmap(optimizer.update,
                                 spmd_axis_name=spmd_axis_name)(
             stacked_params, grads, stacked_opt_state)

@@ -50,18 +50,39 @@ class ParticleModule:
         self.cfg = cfg
         self._vag = lambda p, b: jax.value_and_grad(
             lambda pp: loss(pp, b)[0])(p)
-        self._vag_prog = None
+        self._vag_progs: Dict[Optional[str], Any] = {}
         self._fwd_prog = None
         self._loss_prog = None
 
-    def _value_and_grad(self, params, batch):
-        if self._vag_prog is None:
+    def _value_and_grad(self, params, batch, compute_dtype=None):
+        """Jitted value_and_grad; ``compute_dtype`` applies the same
+        master/compute split as the fused path (core.functional) so NEL
+        and compiled backends stay in numerical agreement under one
+        precision policy: cast params+batch to the compute dtype inside
+        the trace, cast grads back per-leaf, surface the loss fp32. The
+        dtype is part of the program key (None keeps the original key)."""
+        tok = str(jnp.dtype(compute_dtype)) if compute_dtype is not None \
+            else None
+        prog = self._vag_progs.get(tok)
+        if prog is None:
             from ..runtime import ident, jit_program
-            self._vag_prog = jit_program(
-                "nel_value_and_grad",
-                ("nel_value_and_grad", ident(self.loss)),
-                self._vag, (params, batch))
-        return self._vag_prog(params, batch)
+            if compute_dtype is None:
+                fn = self._vag
+                key = ("nel_value_and_grad", ident(self.loss))
+            else:
+                from .precision import cast_floats
+
+                def fn(p, b):
+                    l, g = self._vag(cast_floats(p, compute_dtype),
+                                     cast_floats(b, compute_dtype))
+                    g = jax.tree.map(
+                        lambda gg, pp: gg.astype(pp.dtype), g, p)
+                    return l.astype(jnp.float32), g
+                key = ("nel_value_and_grad", ident(self.loss), tok)
+            prog = jit_program("nel_value_and_grad", key, fn,
+                               (params, batch))
+            self._vag_progs[tok] = prog
+        return prog(params, batch)
 
     def _forward(self, params, batch):
         if self._fwd_prog is None:
@@ -156,7 +177,9 @@ class Particle:
         """Forward+backward+optimizer update on this particle's device."""
 
         def do(_self):
-            loss, grads = _self.module._value_and_grad(_self.state["params"], batch)
+            loss, grads = _self.module._value_and_grad(
+                _self.state["params"], batch,
+                getattr(_self, "compute_dtype", None))
             _self.state["grads"] = grads
             if _self.optimizer is not None:
                 p, s = _self.optimizer.update(_self.state["params"], grads,
@@ -170,7 +193,9 @@ class Particle:
         """Backward only: stash grads, do not update params (SVGD phase 1)."""
 
         def do(_self):
-            loss, grads = _self.module._value_and_grad(_self.state["params"], batch)
+            loss, grads = _self.module._value_and_grad(
+                _self.state["params"], batch,
+                getattr(_self, "compute_dtype", None))
             _self.state["grads"] = grads
             return loss
 

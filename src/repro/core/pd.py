@@ -46,6 +46,8 @@ from ..runtime import BACKENDS, make_runtime
 from .messages import PFuture
 from .nel import NodeEventLoop
 from .particle import Particle, ParticleModule
+from .precision import cast_floats
+from .precision import get as resolve_precision
 from .store import ParticleStore, Placement
 
 
@@ -55,7 +57,7 @@ class PushDistribution:
                  offload: bool = False, backend: str = "nel",
                  max_pending: int = 4096,
                  placement: Optional[Placement] = None,
-                 capacity: int = 0):
+                 capacity: int = 0, precision=None):
         if backend not in BACKENDS:
             # validate BEFORE spawning executor threads: a bad backend
             # must not leak a running NodeEventLoop (nothing would ever
@@ -63,6 +65,14 @@ class PushDistribution:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {backend!r}")
         self.module = module
+        # precision ladder (DESIGN.md §13): explicit arg > module config
+        # > fp32. The resolved policy decides the store's master dtype
+        # (init params are cast once, at creation), the compute dtype of
+        # fused train programs, and the serve copy dtype/quantization.
+        if precision is None:
+            precision = getattr(getattr(module, "cfg", None),
+                                "precision", None)
+        self.precision = resolve_precision(precision)
         self.nel = NodeEventLoop(num_devices=num_devices, cache_size=cache_size,
                                  offload=offload, max_pending=max_pending)
         self.view_size = view_size
@@ -70,7 +80,8 @@ class PushDistribution:
         self.particles: Dict[int, Particle] = {}
         # capacity preallocates store slots (power-of-two) so the first
         # `capacity` p_create calls never bump the compile generation
-        self.store = ParticleStore(placement, capacity=capacity)
+        self.store = ParticleStore(placement, capacity=capacity,
+                                   precision=self.precision)
         self.lifecycle = {"clones": 0, "kills": 0, "rebalances": 0}
         self.runtime = make_runtime(backend, self)
 
@@ -93,11 +104,20 @@ class PushDistribution:
         """Create one particle (replicate the input NN with fresh init)."""
         if params is None:
             params = self.module.init(self._next_rng())
+        # the store's canonical (master) dtype: a "bf16" policy halves
+        # params+opt HBM per particle; opt state inits AFTER the cast so
+        # its moments follow the master dtype automatically
+        if self.precision.master != jax.numpy.dtype("float32"):
+            params = cast_floats(params, self.precision.master)
         opt_state = optimizer.init(params) if optimizer is not None else None
         pid = self.nel.register(None, device=device)
         self.store.register(pid)
         p = Particle(pid, self.nel, self.module, params, optimizer, opt_state,
                      state=state, store=self.store)
+        # NEL per-particle steps trace the same master/compute split as
+        # the fused path (ParticleModule._value_and_grad)
+        p.compute_dtype = self.precision.compute \
+            if self.precision.casts_compute else None
         for msg, fn in (receive or {}).items():
             p.on(msg, fn)
         self.nel._particles[pid] = p
@@ -133,6 +153,7 @@ class PushDistribution:
         p = Particle(new_pid, self.nel, self.module, None, src.optimizer,
                      store=self.store, write_state=False)
         p.receive = dict(src.receive)
+        p.compute_dtype = getattr(src, "compute_dtype", None)
         self.nel._particles[new_pid] = p
         self.particles[new_pid] = p
         self.lifecycle["clones"] += 1

@@ -1,0 +1,279 @@
+"""Mixed-precision policy for particle ensembles (DESIGN.md §13).
+
+One frozen ``Precision`` value is threaded from model/infer configs
+through the store, the runtime and serving:
+
+  master_dtype   what the ``ParticleStore`` holds as the canonical
+                 stacked trees (params + optimizer state). fp32 masters
+                 are the default; a pure-bf16 store halves params+opt
+                 HBM per particle (the big-model headline number).
+  compute_dtype  what fused train programs trace in. When it differs
+                 from the master dtype the cast is a *traced value*
+                 inside the donated step program — gradients come back
+                 cast to the master dtype and the optimizer update runs
+                 against the fp32 masters. No extra H2D, no store key,
+                 no generation bump.
+  serve_dtype    what ``PredictiveEngine`` / paged decode forward in
+                 (defaults to compute_dtype). The serve copy is a
+                 version-memoized on-device cast, compiled once through
+                 the shared ProgramCache.
+  serve_quant    ``"int8"`` further quantizes large weight leaves
+                 per-output-channel for the BMA forward; dequantization
+                 is traced inside the fused predict program.
+  kv_dtype       storage dtype for paged KV pools (``kv_pages``);
+                 None defers to the model config's cache dtype.
+
+The policy is identity for program caching: every spec built under a
+non-default policy carries ``Precision.key()`` in its ``ProgramSpec``,
+which the process-wide ``ProgramCache`` folds into the cache key —
+changing precision is a cold compile, re-running the same precision is
+a warm hit (tests/test_precision.py pins this).
+
+Also here: the named ``jax.checkpoint`` policy menu replacing the old
+boolean ``cfg.remat`` (SNIPPETS.md §1) — selected per model config via
+``cfg.remat_policy`` and applied to the scanned transformer unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Precision", "PRESETS", "get", "cast_floats", "tree_bytes",
+    "quantize_int8", "dequantize", "is_quantized_leaf", "cast_for_serve",
+    "checkpoint_policy", "CHECKPOINT_POLICIES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Master/compute/serve dtype split for one particle ensemble."""
+
+    master_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    serve_dtype: Optional[str] = None      # None -> compute_dtype
+    serve_quant: Optional[str] = None      # None | "int8"
+    kv_dtype: Optional[str] = None         # None -> model cache default
+
+    def __post_init__(self):
+        jnp.dtype(self.master_dtype)       # fail fast on typos
+        jnp.dtype(self.compute_dtype)
+        if self.serve_dtype is not None:
+            jnp.dtype(self.serve_dtype)
+        if self.kv_dtype is not None:
+            jnp.dtype(self.kv_dtype)
+        if self.serve_quant not in (None, "int8"):
+            raise ValueError(
+                f"serve_quant must be None or 'int8', got {self.serve_quant!r}")
+
+    # -- resolved dtypes -----------------------------------------------------
+    @property
+    def master(self):
+        return jnp.dtype(self.master_dtype)
+
+    @property
+    def compute(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def serve(self):
+        return jnp.dtype(self.serve_dtype or self.compute_dtype)
+
+    @property
+    def casts_compute(self) -> bool:
+        """True iff train programs trace a cast copy of the masters."""
+        return self.compute != self.master
+
+    @property
+    def casts_serve(self) -> bool:
+        """True iff serving needs a transformed (cast/quantized) copy."""
+        return self.serve != self.master or self.serve_quant is not None
+
+    def key(self) -> tuple:
+        """Hashable identity for ProgramSpec / ProgramCache keys."""
+        return (str(self.master), str(self.compute), str(self.serve),
+                self.serve_quant, self.kv_dtype)
+
+    def describe(self) -> dict:
+        return {"master": str(self.master), "compute": str(self.compute),
+                "serve": str(self.serve), "serve_quant": self.serve_quant,
+                "kv": self.kv_dtype}
+
+
+#: The precision ladder. ``fp32`` is the no-op default (bit-identical
+#: programs to the pre-policy code); ``mixed`` keeps fp32 masters and
+#: traces bf16 compute; ``bf16`` stores pure-bf16 masters (2x params+opt
+#: memory win, the bench_precision headline); ``mixed_int8`` adds
+#: per-channel int8 weight quantization for the BMA serve path.
+PRESETS = {
+    "fp32": Precision(),
+    "mixed": Precision(compute_dtype="bfloat16"),
+    "bf16": Precision(master_dtype="bfloat16", compute_dtype="bfloat16"),
+    "mixed_int8": Precision(compute_dtype="bfloat16", serve_quant="int8"),
+}
+
+
+def get(p: Any = None) -> Precision:
+    """Resolve ``None`` | preset name | ``Precision`` to a ``Precision``."""
+    if p is None:
+        return PRESETS["fp32"]
+    if isinstance(p, Precision):
+        return p
+    if isinstance(p, str):
+        try:
+            return PRESETS[p]
+        except KeyError:
+            raise ValueError(
+                f"unknown precision preset {p!r}; "
+                f"options: {sorted(PRESETS)}") from None
+    raise TypeError(f"precision must be None, str or Precision, got {type(p)}")
+
+
+# ---------------------------------------------------------------------------
+# tree casts
+# ---------------------------------------------------------------------------
+
+def cast_floats(tree, dtype):
+    """Cast every floating leaf of ``tree`` to ``dtype``; everything else
+    (ints, bools, non-arrays) passes through untouched. Safe inside a
+    trace (pure ``astype``) and a no-op per leaf that already matches."""
+    dtype = jnp.dtype(dtype)
+
+    def cast(x):
+        xd = getattr(x, "dtype", None)
+        if xd is not None and jnp.issubdtype(xd, jnp.floating) \
+                and jnp.dtype(xd) != dtype:
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(cast, tree)
+
+
+def tree_bytes(tree, precision: Any = None) -> int:
+    """Policy-aware per-particle byte estimate: float leaves counted at
+    the policy's *master* itemsize, non-float leaves at their own.
+    Accepts real arrays or ``jax.eval_shape`` structs."""
+    prec = get(precision)
+    fsize = prec.master.itemsize
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(np.prod(np.shape(leaf), dtype=np.int64)) if np.shape(leaf) \
+            else 1
+        ld = getattr(leaf, "dtype", None)
+        if ld is None or jnp.issubdtype(ld, jnp.floating):
+            total += n * fsize
+        else:
+            total += n * np.dtype(ld).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# int8 per-channel weight quantization (serve-side, BMA forward)
+# ---------------------------------------------------------------------------
+
+_QKEYS = frozenset(("q", "s"))
+
+
+def is_quantized_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == _QKEYS
+
+
+def quantize_int8(tree, *, min_ndim: int = 3):
+    """Per-output-channel symmetric int8 quantization of a *stacked*
+    param tree (leading particle axis). Float leaves with
+    ``ndim >= min_ndim`` (the matmul weights: (P, d_in, d_out), embeds
+    (P, V, D)) become ``{"q": int8, "s": fp32 scale}`` with the scale
+    reduced over every axis except the particle axis (0) and the output
+    channel (-1), keepdims so the scale broadcasts back. Small leaves
+    (biases, norm scales) are left for the plain dtype cast."""
+
+    def quant(w):
+        wd = getattr(w, "dtype", None)
+        if wd is None or not jnp.issubdtype(wd, jnp.floating) \
+                or w.ndim < min_ndim:
+            return w
+        wf = w.astype(jnp.float32)
+        axes = tuple(range(1, wf.ndim - 1))
+        amax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
+        s = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
+        return {"q": q, "s": s}
+
+    return jax.tree.map(quant, tree)
+
+
+def dequantize(tree, dtype):
+    """Inverse of :func:`quantize_int8`, traced inside the fused forward:
+    ``{"q", "s"}`` leaves expand to ``q * s`` in fp32 then cast to the
+    serve ``dtype``; everything else is cast via :func:`cast_floats`."""
+    dtype = jnp.dtype(dtype)
+
+    def dq(x):
+        if is_quantized_leaf(x):
+            return (x["q"].astype(x["s"].dtype) * x["s"]).astype(dtype)
+        xd = getattr(x, "dtype", None)
+        if xd is not None and jnp.issubdtype(xd, jnp.floating) \
+                and jnp.dtype(xd) != dtype:
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(dq, tree, is_leaf=is_quantized_leaf)
+
+
+def cast_for_serve(tree, precision: Any):
+    """The serve-copy transform of a stacked master tree under a policy:
+    ``serve_quant="int8"`` packs large weight leaves to ``{"q", "s"}``
+    (scales stay fp32) and casts the un-quantized remainder to the serve
+    dtype; otherwise a plain float cast. This is the body of the
+    engine's ``serve_cast`` program — run once per store commit, never
+    per request."""
+    prec = get(precision)
+    if prec.serve_quant != "int8":
+        return cast_floats(tree, prec.serve)
+    serve = prec.serve
+    tree = quantize_int8(tree)
+
+    def leaf(x):
+        if is_quantized_leaf(x):
+            return x
+        xd = getattr(x, "dtype", None)
+        if xd is not None and jnp.issubdtype(xd, jnp.floating) \
+                and jnp.dtype(xd) != serve:
+            return x.astype(serve)
+        return x
+
+    return jax.tree.map(leaf, tree, is_leaf=is_quantized_leaf)
+
+
+# ---------------------------------------------------------------------------
+# named jax.checkpoint policies (replaces boolean cfg.remat)
+# ---------------------------------------------------------------------------
+
+CHECKPOINT_POLICIES = {
+    "everything_saveable": jax.checkpoint_policies.everything_saveable,
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "dots_with_no_batch_dims_saveable":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def checkpoint_policy(name: str):
+    """Named ``jax.checkpoint`` rematerialization policy (SNIPPETS.md §1).
+
+    ``nothing_saveable`` recomputes everything (minimum activation HBM),
+    ``dots_saveable`` keeps matmul outputs (recompute the cheap
+    elementwise ops only), ``dots_with_no_batch_dims`` keeps only
+    non-batch contractions (weight-gradient matmuls)."""
+    try:
+        return CHECKPOINT_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown checkpoint policy {name!r}; "
+            f"options: {sorted(CHECKPOINT_POLICIES)}") from None

@@ -111,6 +111,7 @@ class Placement:
     @staticmethod
     def auto(particle_axis: str = "data", mode: str = "tp",
              model: Any = 1, *, params_bytes: Optional[int] = None,
+             param_tree: Any = None, precision: Any = None,
              device_memory_bytes: Optional[int] = None) -> "Placement":
         """Mesh over all local devices. ``model`` sets the model-axis
         size (particles get the remaining ``n_devices // model`` ways);
@@ -119,10 +120,26 @@ class Placement:
         ``params_bytes`` (per-particle parameter bytes) vs the local
         device's reported memory (``launch.mesh.pick_model_axis``) —
         multi-host launches call this after ``launch.distributed
-        .initialize()`` so ``jax.devices()`` spans every process."""
+        .initialize()`` so ``jax.devices()`` spans every process.
+
+        The estimate is *precision-aware*: instead of raw
+        ``params_bytes`` you can hand over a ``param_tree`` (real arrays
+        or ``jax.eval_shape`` structs) plus the ensemble's ``precision``
+        policy; the bytes are then counted at the policy's MASTER
+        itemsize (``core.precision.tree_bytes``), so a bf16 store stops
+        oversizing the model axis by 2x. An explicit ``params_bytes``
+        with a ``precision`` is rescaled from the fp32 baseline the
+        callers historically passed."""
         from ..launch.mesh import make_bench_mesh, pick_model_axis
         n = len(jax.devices())
         if model == "auto":
+            from .precision import get as _get_prec, tree_bytes
+            if params_bytes is None and param_tree is not None:
+                params_bytes = tree_bytes(param_tree, precision)
+            elif params_bytes is not None and precision is not None:
+                prec = _get_prec(precision)
+                params_bytes = int(params_bytes
+                                   * prec.master.itemsize / 4)
             model = pick_model_axis(params_bytes or 0, n,
                                     device_memory_bytes=device_memory_bytes)
         model = int(model)
@@ -271,8 +288,14 @@ class ParticleStore:
     doubling)."""
 
     def __init__(self, placement: Optional[Placement] = None,
-                 capacity: int = 0):
+                 capacity: int = 0, precision=None):
         self.placement = placement or Placement()
+        # the ensemble's Precision policy (core.precision). The store
+        # itself is dtype-agnostic — leaves keep whatever dtype is
+        # committed — but it carries the policy so checkpointing can
+        # persist it and obs/serve can report/derive from it.
+        from .precision import get as _resolve_precision
+        self.precision = _resolve_precision(precision)
         self.capacity = _pow2_at_least(capacity) if capacity > 0 else 0
         self._slot_of: Dict[int, int] = {}          # pid -> slot
         self._free: List[int] = list(range(self.capacity))  # min-heap
@@ -845,6 +868,40 @@ class ParticleStore:
                 return int(sum(leaf_bytes(l) for row in rows.values()
                                for l in jax.tree.leaves(row)))
             return int(sum(leaf_bytes(l) for l in jax.tree.leaves(tree)))
+
+    def per_particle_bytes(self, key: str = "params") -> int:
+        """Whole-ensemble bytes of ``key`` (all devices, actual leaf
+        dtypes) divided by capacity — the per-particle HBM footprint the
+        precision ladder moves (bench_precision's headline). 0 when the
+        store holds nothing for the key."""
+        with self._lock:
+            tree = self._stacked.get(key)
+            if tree is None:
+                rows = self._rows.get(key, {})
+                if not rows:
+                    return 0
+                row = next(iter(rows.values()))
+                return int(sum(int(getattr(l, "nbytes", 0))
+                               for l in jax.tree.leaves(row)))
+            total = sum(int(getattr(l, "nbytes", 0))
+                        for l in jax.tree.leaves(tree))
+            return int(total // max(self.capacity, 1))
+
+    def key_dtypes(self, key: str = "params") -> Dict[str, int]:
+        """{dtype name: leaf count} of ``key``'s resident state — the
+        dtype surface obs gauges and checkpoints record (a bf16 store
+        reports {'bfloat16': ...}, masters-only fp32 {'float32': ...})."""
+        out: Dict[str, int] = {}
+        with self._lock:
+            tree = self._stacked.get(key)
+            if tree is None:
+                rows = self._rows.get(key, {})
+                tree = next(iter(rows.values())) if rows else None
+            for leaf in jax.tree.leaves(tree) if tree is not None else ():
+                name = np.dtype(leaf.dtype).name if hasattr(leaf, "dtype") \
+                    else type(leaf).__name__
+                out[name] = out.get(name, 0) + 1
+        return out
 
     def lifecycle_stats(self) -> Dict[str, int]:
         with self._lock:

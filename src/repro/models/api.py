@@ -63,6 +63,17 @@ def init_params(key, cfg):
 # helpers
 # --------------------------------------------------------------------------
 
+def param_footprint(cfg, precision=None) -> int:
+    """Per-particle parameter bytes under a precision policy, from
+    ``jax.eval_shape`` (no FLOPs, no memory): float leaves count at the
+    policy's master itemsize. The estimator ``Placement.auto`` and
+    bench_precision size the model axis / HBM headline with."""
+    from ..core.precision import tree_bytes
+    shapes = jax.eval_shape(partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    return tree_bytes(shapes, precision)
+
+
 def _cache_dtype(cfg):
     return jnp.bfloat16 if jnp.dtype(cfg.dtype) == jnp.bfloat16 else jnp.float32
 

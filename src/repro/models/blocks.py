@@ -36,7 +36,13 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float =
 
 
 def dense_apply(p, x):
-    y = x @ p["w"].astype(x.dtype)
+    w = p["w"]
+    if isinstance(w, dict):
+        # int8 serve pack (core.precision.quantize_int8): expand q * s at
+        # the matmul — callers can run quantized trees straight through
+        # the model without a whole-tree dequantize
+        w = w["q"].astype(w["s"].dtype) * w["s"]
+    y = x @ w.astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y

@@ -244,7 +244,14 @@ def stack_apply_full(params, x, cfg, ctx):
                 caches.append(c)
             return (x, aux), tuple(caches)
 
-        if cfg.remat:
+        # remat menu: a named jax.checkpoint policy beats the boolean
+        # flag — "nothing_saveable" recomputes everything (min HBM),
+        # "dots_saveable" keeps matmul outputs (cheapest recompute)
+        if getattr(cfg, "remat_policy", None):
+            from ..core.precision import checkpoint_policy
+            body = jax.checkpoint(body,
+                                  policy=checkpoint_policy(cfg.remat_policy))
+        elif cfg.remat:
             body = jax.checkpoint(body)
         (x, aux), unit_caches = lax.scan(body, (x, aux), params["units"])
 

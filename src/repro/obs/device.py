@@ -46,10 +46,14 @@ def device_gauges() -> List[Dict[str, Any]]:
 
 def store_gauges(store) -> Dict[str, Any]:
     """Store occupancy as the autoscaler wants it: capacity, live count,
-    the live-slot mask (host-side), and per-device resident bytes for
-    every key under the current placement."""
+    the live-slot mask (host-side), per-device resident bytes for every
+    key under the current placement, and the precision surface — actual
+    leaf dtypes + per-particle bytes per key (computed from leaf dtypes,
+    NOT an itemsize assumption: a bf16 store reports half the fp32
+    bytes) plus the resolved policy."""
     lc = store.lifecycle_stats()
     live = set(store.live_slots())
+    prec = getattr(store, "precision", None)
     return {
         "capacity": lc["capacity"],
         "live": lc["live"],
@@ -58,6 +62,10 @@ def store_gauges(store) -> Dict[str, Any]:
         "live_mask": [1 if s in live else 0 for s in range(lc["capacity"])],
         "per_device_bytes": {k: store.per_device_bytes(k)
                              for k in store.keys()},
+        "per_particle_bytes": {k: store.per_particle_bytes(k)
+                               for k in store.keys()},
+        "dtypes": {k: store.key_dtypes(k) for k in store.keys()},
+        "precision": prec.describe() if prec is not None else None,
     }
 
 

@@ -8,6 +8,9 @@ keyed per engine). Cache-key anatomy (DESIGN.md §8):
     (spec.key,            # semantic identity of the program
      in/out kinds+donate, # argument roles + donation plan (replace()
                           # variants of one spec must not collide)
+     spec.precision,      # mixed-precision policy token — the compute
+                          # cast is traced INSIDE the body, so the fp32
+                          # masters' abstract dtypes cannot carry it
      placement,           # Placement is frozen/hashable: mesh + axes + mode
      state_token,         # store generation: particle-set changes invalidate
      abstract(args))      # (treedef, shape, dtype) per argument — request
@@ -71,8 +74,14 @@ class ProgramCache:
             arg_keys[i] if arg_keys is not None and arg_keys[i] is not None
             else abstract_key(a)
             for i, a in enumerate(args))
+        # spec.precision is part of program identity: a bf16-compute
+        # program consumes the SAME fp32 master inputs as its fp32 twin
+        # (the cast is traced inside the body), so abstract dtypes alone
+        # cannot tell them apart. Changing precision = cold compile;
+        # re-running the same precision = warm hit (test_precision.py).
         return (spec.key, spec.in_kinds, spec.out_kinds, spec.donate,
-                placement or Placement(), state_token, abstract)
+                spec.precision, placement or Placement(), state_token,
+                abstract)
 
     # -- the lookup path -----------------------------------------------------
     def lookup(self, spec: ProgramSpec, placement: Optional[Placement],

@@ -105,6 +105,13 @@ class ProgramSpec:
     in_kinds: Tuple[str, ...]       # one kind per positional argument
     out_kinds: Optional[Tuple[str, ...]] = None
     donate: Tuple[int, ...] = ()    # argnums donated to XLA
+    # mixed-precision identity (core.precision.Precision.key()). A
+    # bf16-compute program takes the SAME fp32 master inputs as its fp32
+    # twin — the cast is traced inside — so the abstract-arg dtypes
+    # alone cannot distinguish them; this token folds the policy into
+    # the ProgramCache key. None = fp32 default (key-compatible with
+    # every pre-policy entry).
+    precision: Optional[Tuple] = None
 
     def __post_init__(self):
         for k in self.in_kinds:

@@ -21,22 +21,34 @@ import jax
 import jax.numpy as jnp
 
 from ..core import functional
+from ..core import precision as precision_mod
 from .program import ProgramSpec, ident
 
 
-def ensemble_step(loss_fn: Callable, optimizer) -> ProgramSpec:
+def ensemble_step(loss_fn: Callable, optimizer,
+                  precision=None) -> ProgramSpec:
     """One train step for all particles: vmapped value_and_grad +
     optimizer update. State donated — a multi-epoch loop reuses the
     buffers in place and never touches the host. Call with or without a
-    trailing active mask (the functional body defaults it to dense)."""
+    trailing active mask (the functional body defaults it to dense).
+
+    ``precision`` (preset name / ``Precision``) selects the
+    master/compute split: when compute != master, the body casts the
+    masters to the compute dtype in-trace, casts grads back, and updates
+    the masters (core.functional.ensemble_step). The policy rides on
+    ``ProgramSpec.precision`` so the ProgramCache keys on it."""
+    prec = precision_mod.get(precision)
+    cd = prec.compute if prec.casts_compute else None
     return ProgramSpec(
         name="ensemble_step",
         key=("ensemble_step", ident(loss_fn), ident(optimizer)),
         make=lambda ctx: functional.ensemble_step(loss_fn, optimizer,
-                                                  ctx.spmd_axis),
+                                                  ctx.spmd_axis,
+                                                  compute_dtype=cd),
         in_kinds=("state", "state", "replicated", "replicated"),
         out_kinds=("in:0", "in:1", "vector"),
-        donate=(0, 1))
+        donate=(0, 1),
+        precision=prec.key() if prec.casts_compute else None)
 
 
 def ensemble_predict(forward: Callable) -> ProgramSpec:

@@ -663,6 +663,10 @@ class DecodeScheduler:
         out["row_occupancy"] = out["active_row_steps"] / (
             steps * self.max_active)
         out["pool"] = self.pool.snapshot_stats()
+        # KV storage gauges (precision ladder, DESIGN.md §13): page dtype
+        # histogram + resident bytes, so bf16/fp8 pools are visible in
+        # pd.stats()["decode"] next to the page-churn counters
+        out["kv_pages"] = self.engine.kv_page_info()
         return out
 
     # -- lifecycle -----------------------------------------------------------

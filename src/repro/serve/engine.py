@@ -42,12 +42,14 @@ Two program shapes:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import precision as precision_mod
 from ..core.store import ParticleStore, Placement
 from ..runtime import (ProgramCache, ProgramSpec, abstract_key, bucket_size,
                        global_cache, ident, pad_rows)
@@ -97,7 +99,7 @@ class PredictiveEngine:
                  store: Optional[ParticleStore] = None, key: str = "params",
                  params: Any = None, placement: Optional[Placement] = None,
                  kind: str = "classify", stateful: bool = False,
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None, precision: Any = None):
         if (store is None) == (params is None):
             raise ValueError("pass exactly one of store= or params=")
         if kind not in uncertainty.KINDS:
@@ -107,6 +109,14 @@ class PredictiveEngine:
         self.key = key
         self.kind = kind
         self.stateful = stateful
+        # serve-side precision ladder (DESIGN.md §13): explicit arg >
+        # the store's policy > fp32. ``casts_serve`` engines maintain a
+        # version-memoized serve-dtype (optionally int8-quantized) copy
+        # of the stacked params; the fp32 default is a zero-overhead
+        # pass-through (identical programs to the pre-policy code).
+        if precision is None and store is not None:
+            precision = getattr(store, "precision", None)
+        self.precision = precision_mod.get(precision)
         if placement is None:
             placement = store.placement if store is not None else Placement()
         self.placement = placement
@@ -116,6 +126,11 @@ class PredictiveEngine:
         if params is not None and placement.mesh is not None:
             self._static_params = jax.device_put(
                 params, placement.shardings(params))
+        if params is not None and self.precision.casts_serve:
+            # one-time transform for static trees (serve-time SWAG
+            # samples): eager is fine here, there is no commit cadence
+            self._static_params = precision_mod.cast_for_serve(
+                self._static_params, self.precision)
         self._static_mask: Any = None
         self._live_idx: Any = None      # (mask object, live row indices)
         self._params_version: Any = None
@@ -145,11 +160,39 @@ class PredictiveEngine:
             self._refresh_params(v, self.store.stacked(self.key))
         return self._params_cache
 
+    def _serve_cast_spec(self) -> ProgramSpec:
+        memo = self._spec_memo.get("serve_cast")
+        if memo is not None:
+            return memo
+        prec = self.precision
+        spec = ProgramSpec(
+            name="serve_cast",
+            # no ident(): every engine over any store shares one compiled
+            # cast per (policy, placement, shapes) — a second service on
+            # the same store compiles nothing, and churn re-runs it warm
+            key=("serve_cast",),
+            make=lambda ctx: lambda stacked: precision_mod.cast_for_serve(
+                stacked, prec),
+            in_kinds=("state",),
+            out_kinds=None,
+            precision=prec.key())
+        self._spec_memo["serve_cast"] = spec
+        return spec
+
     def _refresh_params(self, version, stacked):
         """Install a freshly flushed stacked tree in the memo. Shapes are
         capacity-padded, so the abstract key can only change with the
         generation — content edits (incl. clone/kill churn) refresh the
-        tree reference without re-walking it."""
+        tree reference without re-walking it.
+
+        Under a ``casts_serve`` policy the memo holds the serve copy —
+        cast (and optionally int8-packed) from the masters by one
+        compiled program per store commit. The copy is a derived value:
+        never a store key, never committed back."""
+        if self.precision.casts_serve:
+            stacked = self.cache.run(self._serve_cast_spec(), stacked,
+                                     placement=self.placement,
+                                     state_token=self._state_token())
         self._params_cache = stacked
         if self._params_version is None \
                 or version[0] != self._params_version[0]:
@@ -202,13 +245,23 @@ class PredictiveEngine:
         memo = self._spec_memo.get(("predict", members))
         if memo is not None:
             return memo
-        fwd, kind = self.forward, self.kind
+        fwd, kind, prec = self.forward, self.kind, self.precision
 
         def make(ctx):
             def fused(stacked_params, b, mask):
+                if prec.casts_serve:
+                    # dequantize int8 packs / finish the serve cast at
+                    # trace top (a no-op on already-cast leaves), cast
+                    # the batch floats alongside; the uncertainty heads
+                    # reduce in fp32 regardless of the member dtype
+                    stacked_params = precision_mod.dequantize(stacked_params,
+                                                              prec.serve)
+                    b = precision_mod.cast_floats(b, prec.serve)
                 outs = jax.vmap(fwd, in_axes=(0, None),
                                 spmd_axis_name=ctx.spmd_axis)(
                     stacked_params, b)
+                if prec.casts_serve:
+                    outs = precision_mod.cast_floats(outs, jnp.float32)
                 heads, outs_rep = _bma_reduce_heads(outs, ctx.placement,
                                                     ctx.num_particles, kind,
                                                     mask)
@@ -221,7 +274,8 @@ class PredictiveEngine:
             key=("bma_predict", ident(fwd), kind, members),
             make=make,
             in_kinds=("state", "replicated", "replicated"),
-            out_kinds=("replicated",))
+            out_kinds=("replicated",),
+            precision=prec.key() if prec.casts_serve else None)
         self._spec_memo[("predict", members)] = spec
         return spec
 
@@ -229,13 +283,19 @@ class PredictiveEngine:
         memo = self._spec_memo.get("step")
         if memo is not None:
             return memo
-        fwd, kind = self.forward, self.kind
+        fwd, kind, prec = self.forward, self.kind, self.precision
 
         def make(ctx):
             def fused(stacked_params, st, b, mask):
+                if prec.casts_serve:
+                    stacked_params = precision_mod.dequantize(stacked_params,
+                                                              prec.serve)
+                    b = precision_mod.cast_floats(b, prec.serve)
                 outs, new_st = jax.vmap(fwd, in_axes=(0, 0, None),
                                         spmd_axis_name=ctx.spmd_axis)(
                     stacked_params, st, b)
+                if prec.casts_serve:
+                    outs = precision_mod.cast_floats(outs, jnp.float32)
                 heads, _ = _bma_reduce_heads(outs, ctx.placement,
                                              ctx.num_particles, kind, mask)
                 return heads, new_st
@@ -247,7 +307,8 @@ class PredictiveEngine:
             key=("bma_step", ident(fwd), kind),
             make=make,
             in_kinds=("state", "rows", "replicated", "replicated"),
-            out_kinds=("replicated", "in:1"))
+            out_kinds=("replicated", "in:1"),
+            precision=prec.key() if prec.casts_serve else None)
         self._spec_memo["step"] = spec
         return spec
 
@@ -308,12 +369,24 @@ class PredictiveEngine:
         maps one particle's params to its state (e.g. prefill -> caches);
         vmapped over the stacked axis so state is born sharded."""
         stacked = self.stacked_params()
+        prec = self.precision
+
+        def make(ctx):
+            row_fn = make_state
+            if prec.casts_serve:
+                # the memoized copy may hold int8 packs: expand per row
+                # so make_state sees ordinary float params
+                def row_fn(row):
+                    return make_state(precision_mod.dequantize(row,
+                                                               prec.serve))
+            return jax.vmap(row_fn, spmd_axis_name=ctx.spmd_axis)
+
         spec = ProgramSpec(
             name="serve_init_state",
             key=("serve_init_state", ident(make_state)),
-            make=lambda ctx: jax.vmap(make_state,
-                                      spmd_axis_name=ctx.spmd_axis),
-            in_kinds=("state",))
+            make=make,
+            in_kinds=("state",),
+            precision=prec.key() if prec.casts_serve else None)
         # not counted in the request-path compile stats: state init is a
         # one-off setup call, not part of the serving hot path
         return self.cache.run(spec, stacked,
@@ -353,9 +426,15 @@ class PagedDecodeEngine(PredictiveEngine):
                  store: ParticleStore, n_pmax: int, key: str = "params",
                  pages_key: str = "kv_pages",
                  placement: Optional[Placement] = None,
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None, precision: Any = None):
         super().__init__(decode_fn, store=store, key=key, kind="classify",
-                         placement=placement, cache=cache)
+                         placement=placement, cache=cache,
+                         precision=precision)
+        if self.precision.serve_quant is not None:
+            # int8 packing is a BMA-forward optimization; the decode path
+            # serves the plain serve-dtype cast (pages dominate its HBM)
+            self.precision = dataclasses.replace(self.precision,
+                                                 serve_quant=None)
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
         self.pages_key = pages_key
@@ -386,6 +465,9 @@ class PagedDecodeEngine(PredictiveEngine):
             memo = paged_decode_step(
                 self.decode_fn, self._reduce_fn(),
                 key=(ident(self.decode_fn), self.kind))
+            if self.precision.casts_serve:
+                memo = dataclasses.replace(memo,
+                                           precision=self.precision.key())
             self._spec_memo["paged_decode"] = memo
         return memo
 
@@ -395,8 +477,24 @@ class PagedDecodeEngine(PredictiveEngine):
             memo = paged_prefill(
                 self.prefill_fn, self._reduce_fn(), n_pmax=self.n_pmax,
                 key=(ident(self.prefill_fn), self.kind))
+            if self.precision.casts_serve:
+                memo = dataclasses.replace(memo,
+                                           precision=self.precision.key())
             self._spec_memo["paged_prefill"] = memo
         return memo
+
+    def kv_page_info(self) -> Dict[str, Any]:
+        """Dtype + bytes gauges for the paged KV pool (DecodeScheduler
+        stats / obs.device): leaf dtype histogram and total store bytes
+        of the ``pages_key`` tree."""
+        info: Dict[str, Any] = {"key": self.pages_key}
+        try:
+            info["dtypes"] = self.store.key_dtypes(self.pages_key)
+            info["per_device_bytes"] = \
+                self.store.per_device_bytes(self.pages_key)
+        except Exception:
+            info["dtypes"] = {}
+        return info
 
     # -- pages checkout/commit ------------------------------------------------
     def _checkout_pages(self):

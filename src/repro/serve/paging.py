@@ -31,14 +31,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def create_kv_pages(store, make_pages: Callable, *, key: str = "kv_pages"):
+def create_kv_pages(store, make_pages: Callable, *, key: str = "kv_pages",
+                    dtype=None):
     """Install the stacked page pool as a store scratch key.
 
     ``make_pages()`` builds ONE particle's page pytree (e.g.
     ``models.api.paged_cache_init``); the stacked tree broadcasts it over
-    the store capacity. This is the one generation bump of the paged
-    path (a new key in the schema) — do it before serving warmup."""
+    the store capacity. ``dtype=`` overrides the storage dtype of every
+    floating page leaf — the precision ladder's ``kv_dtype`` lands here
+    when the factory itself is not dtype-parameterized. This is the one
+    generation bump of the paged path (a new key in the schema) — do it
+    before serving warmup."""
     shapes = jax.eval_shape(make_pages)
+    if dtype is not None:
+        dtype = jnp.dtype(dtype)
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), shapes)
     stacked = jax.tree.map(
         lambda s: jnp.zeros((store.capacity,) + s.shape, s.dtype), shapes)
     store.commit(key, stacked)

@@ -129,23 +129,31 @@ def _resolve_pd(obj):
 def serve(obj, *, kind: str = "classify", max_batch: int = 32,
           max_wait_ms: float = 2.0, max_queue: int = 512,
           params: Any = None, forward=None,
-          placement: Optional[Placement] = None) -> PredictiveService:
+          placement: Optional[Placement] = None,
+          precision: Any = None) -> PredictiveService:
     """Turn a trained PushDistribution (or its Infer) into a batched
     posterior-predictive service.
 
     Default: serve the store's live ``"params"`` (deep-ensemble BMA over
     the current particles). ``params=`` overrides with a static stacked
     tree — the MultiSWAG serve-time sampling handoff
-    (``MultiSWAG.posterior_predictive``) uses this.
+    (``MultiSWAG.posterior_predictive``) uses this. ``precision=``
+    overrides the serve-side policy; store-backed engines default to the
+    store's own (so a PD built with ``precision="mixed"`` serves bf16
+    without any flag here).
     """
     pd = _resolve_pd(obj)
     fwd = forward if forward is not None else pd.module.forward
+    if precision is None and params is not None:
+        # static trees detach from the store; inherit the PD's policy
+        precision = getattr(pd, "precision", None)
     if params is not None:
         engine = PredictiveEngine(fwd, params=params, kind=kind,
-                                  placement=placement or pd.placement)
+                                  placement=placement or pd.placement,
+                                  precision=precision)
     else:
         engine = PredictiveEngine(fwd, store=pd.store, kind=kind,
-                                  placement=placement)
+                                  placement=placement, precision=precision)
     return PredictiveService(engine, max_batch=max_batch,
                              max_wait_ms=max_wait_ms, max_queue=max_queue)
 
@@ -225,7 +233,7 @@ def serve_decode(obj, cfg=None, *, num_pages: int, page_size: int,
                  decode_kernel: bool = True, cache_dtype=None,
                  placement: Optional[Placement] = None,
                  pages_key: str = "kv_pages", warmup: bool = True,
-                 warmup_buckets=()) -> DecodeService:
+                 warmup_buckets=(), precision: Any = None) -> DecodeService:
     """Turn a PushDistribution holding an LM ensemble into a
     continuous-batching posterior-predictive decode service.
 
@@ -251,6 +259,12 @@ def serve_decode(obj, cfg=None, *, num_pages: int, page_size: int,
     cfg = cfg if cfg is not None else getattr(pd.module, "cfg", None)
     if cfg is None:
         raise ValueError("pass cfg= (the module carries none)")
+    if cache_dtype is None:
+        # the precision ladder's kv_dtype names the page storage dtype;
+        # explicit cache_dtype= still wins, None falls through to the
+        # model config's cache default
+        prec = getattr(pd, "precision", None)
+        cache_dtype = prec.kv_dtype if prec is not None else None
     if max_seq_pages is None:
         max_seq_pages = -(-cfg.max_seq_len // page_size)
     n_pmax = min(max_seq_pages, num_pages)
@@ -273,7 +287,7 @@ def serve_decode(obj, cfg=None, *, num_pages: int, page_size: int,
     pool = PagePool(num_pages, page_size, max_seq_pages=n_pmax)
     engine = PagedDecodeEngine(decode_fn, prefill_fn, store=pd.store,
                                n_pmax=n_pmax, pages_key=pages_key,
-                               placement=placement)
+                               placement=placement, precision=precision)
     scheduler = DecodeScheduler(engine, pool, max_active=max_active,
                                 eos_id=eos_id, max_queue=max_queue)
     if warmup:

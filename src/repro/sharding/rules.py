@@ -63,10 +63,21 @@ def normalize_path(path) -> str:
     return s
 
 
+# int8 serve copies (core.precision.quantize_int8) expand a weight leaf
+# ".../w" into a {"q", "s"} pack — paths ".../w/q" and ".../w/s". Both
+# carry the weight's rule: q has the weight's shape exactly; s is the
+# keepdims per-channel scale (same ndim, inner dims 1 — param_spec's
+# divisibility drop nulls the collapsed axes, the channel axis shards).
+_QUANT_SUFFIX = re.compile(r"/(q|s)$")
+
+
 def spec_tail(path_str: str, mode: str) -> Optional[Tuple]:
     for rx, tp, ftp in _COMPILED:
         if rx.search(path_str):
             return tp if mode == "tp" else ftp
+    base = _QUANT_SUFFIX.sub("", path_str)
+    if base != path_str:
+        return spec_tail(base, mode)
     return None
 
 

@@ -14,7 +14,10 @@ Asserts, for a PredictiveService over a 4-device mesh placement:
   4. the runtime's process-wide ProgramCache dedupes across subsystems
      under the mesh too: repeated identical requests and a SECOND
      service over the same store trigger zero cold compiles while
-     ``store.version()`` is unchanged.
+     ``store.version()`` is unchanged;
+  5. the precision ladder survives the mesh: a "mixed" store serves its
+     bf16 copy with zero stacked-state traffic per request, zero cold
+     compiles under clone/kill churn, and fp32 masters stay sharded.
 
 When ``REPRO_TRACE_OUT`` is set, the whole run executes with obs tracing
 enabled and dumps a Perfetto-loadable Chrome trace-event JSON to that
@@ -199,6 +202,56 @@ def main():
         lc = pd.stats()["lifecycle"]
         assert lc["clones"] == 3 and lc["kills"] == 3 and lc["live"] == 4
 
+    # --- precision phase: a "mixed" store under the mesh. The bf16
+    # serve copy is a version-memoized transformed view of the sharded
+    # masters: serving still reads NO stacked store state per request,
+    # clone/kill churn cold-compiles nothing (the serve-cast program
+    # keys on padded shapes + the precision token, both churn-invariant),
+    # and a second engine over the same store shares every program.
+    from repro.core import PushDistribution
+    from repro.runtime import global_cache
+
+    with PushDistribution(tiny_module(), num_devices=1, seed=0,
+                          backend="compiled", capacity=N_PARTICLES,
+                          placement=placement, precision="mixed") as pdm:
+        for _ in range(N_PARTICLES):
+            pdm.p_create(sgd(0.05))
+        probe = {"x": x}
+        engb = PredictiveEngine(pdm.module.forward, store=pdm.store,
+                                kind="regress")
+        assert engb.precision.casts_serve
+        engb.predict(probe)                        # warm (serve cast + BMA)
+        # steady state: repeat requests reuse the memoized serve copy —
+        # no stacked-state traffic at all (churn below legitimately
+        # commits cloned rows, so the zero-delta window ends here)
+        before = pdm.store.snapshot_stats()
+        for _ in range(3):
+            engb.predict(probe)
+        after = pdm.store.snapshot_stats()
+        bdelta = {k: after[k] - before[k] for k in FLAT_KEYS}
+        assert all(v == 0 for v in bdelta.values()), \
+            f"bf16 serving touched stacked state: {bdelta}"
+        cold0 = global_cache().snapshot_stats()["cold_compiles"]
+        for _ in range(3):
+            victim = pdm.particle_ids()[0]
+            pdm.p_kill(victim)
+            pdm.p_clone(pdm.particle_ids()[0], jitter=0.01)
+            headsb = engb.predict(probe)
+            live = pdm.particle_ids()
+            refb = np.mean([np.asarray(x @ pdm.p_params(p)["w"]
+                                       + pdm.p_params(p)["b"])
+                            for p in live], 0)
+            berr = float(np.abs(np.asarray(headsb["mean"]) - refb).max())
+            assert berr < 0.05, f"bf16 BMA vs fp32 masters: {berr}"
+        assert global_cache().snapshot_stats()["cold_compiles"] == cold0, \
+            "bf16 churn cold-compiled under the mesh"
+        engb2 = PredictiveEngine(pdm.module.forward, store=pdm.store,
+                                 kind="regress")
+        engb2.predict(probe)
+        assert global_cache().snapshot_stats()["cold_compiles"] == cold0, \
+            "second bf16 engine over the same store recompiled"
+        check_sharded(pdm.store, "params")         # masters stay sharded
+
     # --- decode phase: continuous-batching paged decode under the mesh.
     # The KV page pool is store state like params: born sharded over the
     # particle axis, still sharded after serving, and steady-state decode
@@ -255,7 +308,8 @@ def main():
 
     print(f"parity {err:.2e}, stacked state untouched across requests "
           f"({N_DEV} devices), heads replicated, stateful state sharded, "
-          "churn cold-compiled nothing, decode pages stayed sharded")
+          "churn cold-compiled nothing (fp32 AND bf16 serve copies), "
+          "decode pages stayed sharded")
     print("OK")
 
 

@@ -271,6 +271,79 @@ def test_decode_serving_survives_churn_with_zero_cold_compiles():
             svc.close()
 
 
+def test_bf16_serving_survives_churn_with_zero_cold_compiles():
+    """PR 5's invariant survives the precision ladder: on a store with a
+    bf16 serve copy ("mixed"), clone/kill churn compiles NOTHING — the
+    serve-cast program and the BMA forward both key on capacity-padded
+    shapes plus the precision token, and neither moves during churn."""
+    with PushDistribution(_module(), num_devices=1, seed=0,
+                          backend="compiled", capacity=4,
+                          precision="mixed") as pd:
+        pids = [pd.p_create(sgd(0.05)) for _ in range(4)]
+        x = jax.random.normal(jax.random.PRNGKey(9), (8, 3))
+        eng = PredictiveEngine(pd.module.forward, store=pd.store,
+                               kind="regress")
+        assert eng.precision.casts_serve
+        eng.predict((x, None))                     # warm compile
+        cold = _cold()
+        for round_ in range(3):
+            victim = pd.particle_ids()[0]
+            pd.p_kill(victim)
+            src = pd.particle_ids()[0]
+            pd.p_clone(src, jitter=0.01)
+            heads = eng.predict((x, None))
+            live = pd.particle_ids()
+            ref = np.mean([np.asarray(x @ pd.p_params(p)["w"]
+                                      + pd.p_params(p)["b"])
+                           for p in live], 0)
+            # bf16 serve copy: tolerance is rounding, not exactness
+            assert np.abs(np.asarray(heads["mean"]) - ref).max() < 0.05
+        assert _cold() == cold, \
+            "bf16 churn must not recompile serving or serve-cast programs"
+
+
+def test_bf16_decode_serving_steady_state_compiles_nothing():
+    """PR 6's invariant on a pure-bf16 store: steady-state paged decode
+    (and one clone/kill round-trip) cold-compiles nothing, and greedy
+    decode stays deterministic across the churn."""
+    from repro import configs
+    from repro.models import api
+    from repro.serve import serve_decode
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=64)
+    lm = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+    prompt = [3, 5, 7, 11, 13]
+    with PushDistribution(lm, num_devices=1, seed=0, capacity=4,
+                          precision="bf16") as pd:
+        pids = [pd.p_create() for _ in range(2)]
+        for p in pids:
+            leaves = jax.tree.leaves(pd.p_params(p))
+            assert all(l.dtype == jnp.bfloat16 for l in leaves)
+        svc = serve_decode(pd, cfg, num_pages=16, page_size=8,
+                           max_active=2, warmup_buckets=(8,))
+        try:
+            base = svc.generate(prompt, max_new=4)
+            cold = _cold()
+            again = svc.generate(prompt, max_new=4)
+            assert again.tokens == base.tokens      # steady-state greedy
+            with svc.scheduler.step_lock:
+                twin = pd.p_clone(pids[0], jitter=0.01)
+            svc.generate(prompt, max_new=4)
+            with svc.scheduler.step_lock:
+                pd.p_kill(twin)
+            back = svc.generate(prompt, max_new=4)
+            assert back.tokens == base.tokens
+            assert _cold() == cold, \
+                "bf16 decode steady state must not recompile"
+        finally:
+            svc.close()
+
+
 def test_fused_training_after_churn_reuses_program():
     data = [_batch()]
     with DeepEnsemble(_module(), num_devices=1, seed=0,

@@ -1,0 +1,323 @@
+"""Mixed-precision policy (DESIGN.md §13): bf16-compute train parity
+against fp32, fp32-master update exactness where pure bf16 stalls, int8
+BMA serving tolerance, precision-in-the-ProgramCache-key, checkpoint
+dtype round-trips in both directions, the named remat-policy menu, and
+policy-aware byte estimates / model-axis sizing.
+
+The acceptance bar: "mixed" (fp32 masters, bf16 compute) tracks fp32
+training within tolerance while masters stay float32; tiny constant
+updates (1e-3 at w=1.0, below the bf16 spacing of 2^-8) accumulate in
+fp32 masters but round away in a pure-bf16 store; switching precision is
+a cache MISS (cold compile), re-running the same precision is a HIT.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParticleModule, PushDistribution
+from repro.core.precision import (PRESETS, Precision, cast_floats,
+                                  checkpoint_policy, dequantize, get,
+                                  quantize_int8, tree_bytes)
+from repro.optim import sgd
+from repro.runtime import global_cache, specs
+from repro.serve import PredictiveEngine
+
+
+def _module():
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (3, 4)) * 0.5,
+                "b": jax.random.normal(k2, (4,)) * 0.1}
+
+    def loss(p, b):
+        return jnp.mean((b[0] @ p["w"] + p["b"] - b[1]) ** 2), {}
+
+    def fwd(p, b):
+        return b[0] @ p["w"] + p["b"]
+
+    return ParticleModule(init, loss, fwd)
+
+
+def _batch(m=8, seed=3):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, 3))
+    return (x, x @ jnp.ones((3, 4)))
+
+
+def _cold():
+    return global_cache().snapshot_stats()["cold_compiles"]
+
+
+def _stacked(mod, n=4, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return jax.vmap(mod.init)(ks)
+
+
+# ---------------------------------------------------------------------------
+# policy resolution + presets
+# ---------------------------------------------------------------------------
+
+def test_preset_ladder_resolves():
+    assert get(None) == PRESETS["fp32"]
+    assert get("mixed").casts_compute and not get("fp32").casts_compute
+    assert get("bf16").master == jnp.dtype(jnp.bfloat16)
+    assert get("mixed_int8").serve_quant == "int8"
+    p = get("mixed")
+    assert get(p) is p                     # Precision passes through
+    with pytest.raises(ValueError):
+        get("fp8_dreams")
+
+
+def test_precision_key_distinguishes_policies():
+    keys = {get(name).key() for name in PRESETS}
+    assert len(keys) == len(PRESETS)
+
+
+# ---------------------------------------------------------------------------
+# bf16 compute parity: "mixed" tracks fp32 training within tolerance
+# ---------------------------------------------------------------------------
+
+def test_bf16_compute_train_loss_tracks_fp32():
+    mod, opt = _module(), sgd(0.05)
+    batch, mask = _batch(), jnp.ones((4,))
+    cache = global_cache()
+    finals = {}
+    for name in ("fp32", "mixed"):
+        params = _stacked(mod)                     # same seed -> same init
+        opt_state = jax.vmap(opt.init)(params)
+        spec = specs.ensemble_step(mod.loss, opt, precision=name)
+        for _ in range(5):
+            params, opt_state, losses = cache.run(spec, params, opt_state,
+                                                  batch, mask)
+        finals[name] = float(jnp.mean(losses))
+        # masters never leave fp32 under "mixed"
+        assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(params))
+        assert losses.dtype == jnp.float32         # losses surface as fp32
+    assert abs(finals["mixed"] - finals["fp32"]) < \
+        0.1 * abs(finals["fp32"]) + 0.05
+
+
+def test_nel_and_compiled_backends_agree_under_mixed():
+    # both runtimes implement the SAME master/compute split: the actor
+    # path's per-particle value_and_grad traces the bf16 cast exactly
+    # like core.functional.ensemble_step does on the stacked axis
+    from repro.bdl import DeepEnsemble
+    from repro.optim import adam
+
+    mod, data = _module(), [_batch()]
+    preds = {}
+    for be in ("nel", "compiled"):
+        with DeepEnsemble(mod, num_devices=1, seed=0, backend=be,
+                          precision="mixed") as de:
+            de.bayes_infer(data, 5, optimizer=adam(1e-2), num_particles=4)
+            preds[be] = np.asarray(de.posterior_pred(data[0]))
+    err = np.abs(preds["nel"] - preds["compiled"]).max()
+    assert err < 1e-4, f"nel vs compiled under mixed precision: {err}"
+
+
+# ---------------------------------------------------------------------------
+# master-weight exactness: tiny steps survive fp32 accumulation, not bf16
+# ---------------------------------------------------------------------------
+
+def test_fp32_masters_accumulate_updates_below_bf16_spacing():
+    # constant gradient 1e-3; bf16 spacing at 1.0 is 2^-8 = 0.0039, so a
+    # pure-bf16 store rounds every update away and never moves, while
+    # fp32 masters (even with bf16 compute) accumulate all 50 steps
+    def init(rng):
+        return {"w": jnp.ones((4,))}
+
+    def loss(p, b):
+        return 1e-3 * jnp.sum(p["w"]), {}
+
+    mod = ParticleModule(init, loss, lambda p, b: p["w"])
+    opt = sgd(1.0)
+    batch, mask = (jnp.zeros((1,)),), jnp.ones((2,))
+    cache = global_cache()
+    out = {}
+    for name in ("mixed", "bf16"):
+        params = _stacked(mod, n=2)
+        if get(name).master != jnp.dtype(jnp.float32):
+            params = cast_floats(params, get(name).master)
+        opt_state = jax.vmap(opt.init)(params)
+        spec = specs.ensemble_step(mod.loss, opt, precision=name)
+        for _ in range(50):
+            params, opt_state, _ = cache.run(spec, params, opt_state,
+                                             batch, mask)
+        out[name] = np.asarray(params["w"], np.float32)
+    assert np.all(out["bf16"] == 1.0), "bf16 masters must stall (spacing)"
+    assert np.abs(out["mixed"] - 0.95).max() < 2e-3, \
+        "fp32 masters must accumulate ~50 x 1e-3"
+
+
+# ---------------------------------------------------------------------------
+# serving: bf16 + int8 ensembles within tolerance of fp32 masters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,tol", [("mixed", 0.03), ("mixed_int8", 0.06)])
+def test_quantized_serving_heads_match_fp32_reference(policy, tol):
+    with PushDistribution(_module(), num_devices=1, capacity=4,
+                          precision=policy) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(4)]
+        x = jax.random.normal(jax.random.PRNGKey(5), (6, 3))
+        eng = PredictiveEngine(pd.module.forward, store=pd.store,
+                               kind="regress")
+        assert eng.precision.casts_serve          # inherited from the store
+        heads = eng.predict((x, None))
+        assert heads["mean"].dtype == jnp.float32  # heads surface as fp32
+        ref = np.mean([np.asarray(x @ pd.p_params(p)["w"]
+                                  + pd.p_params(p)["b"]) for p in pids], 0)
+        assert np.abs(np.asarray(heads["mean"]) - ref).max() < tol
+
+
+def test_int8_quantization_roundtrip_error_bounded():
+    w = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 8)) * 0.5
+    q = quantize_int8({"w": w})["w"]
+    assert q["q"].dtype == jnp.int8 and q["s"].shape == (2, 1, 8)
+    back = np.asarray(dequantize({"w": q}, jnp.float32)["w"])
+    # per-channel scale bounds the error at scale/2 = amax/254
+    amax = np.abs(np.asarray(w)).max(axis=1, keepdims=True)
+    assert np.abs(back - np.asarray(w)).max() <= (amax / 254 + 1e-7).max()
+
+
+# ---------------------------------------------------------------------------
+# the ProgramCache keys on precision: switch = cold, re-run = warm
+# ---------------------------------------------------------------------------
+
+def test_precision_is_a_cache_key_dimension():
+    mod, opt = _module(), sgd(0.1)
+    params = _stacked(mod)
+    opt_state = jax.vmap(opt.init)(params)
+    args = (params, opt_state, _batch(), jnp.ones((4,)))
+    s_fp32 = specs.ensemble_step(mod.loss, opt)
+    s_mixed = specs.ensemble_step(mod.loss, opt, precision="mixed")
+    # fp32 carries NO precision token: cache keys stay byte-compatible
+    # with pre-policy entries (and AOT-preloaded blobs)
+    assert s_fp32.precision is None
+    assert s_mixed.precision == get("mixed").key()
+    cache = global_cache()
+    c0 = _cold()
+    cache.lookup(s_fp32, None, args)
+    assert _cold() == c0 + 1
+    # same abstract args (the cast is traced INSIDE), still a distinct key
+    cache.lookup(s_mixed, None, args)
+    assert _cold() == c0 + 2
+    cache.lookup(s_mixed, None, args)          # re-run same policy: warm
+    assert _cold() == c0 + 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: dtypes round-trip, restore re-casts in both directions
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_preserves_bf16_and_recasts_up(tmp_path):
+    from repro.checkpoint import restore_store, save_store
+    with PushDistribution(_module(), num_devices=1, capacity=4,
+                          precision="bf16") as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(3)]
+        want = {p: jax.tree.map(np.asarray, pd.p_params(p)) for p in pids}
+        save_store(str(tmp_path), 1, pd.store)
+    # default restore revives the saved policy: bfloat16 comes back exact
+    # (npz stores a widened fp32 copy; the manifest's per-leaf dtypes
+    # drive the re-cast — bf16 -> fp32 -> bf16 is lossless)
+    _, s2 = restore_store(str(tmp_path))
+    assert s2.precision.master == jnp.dtype(jnp.bfloat16)
+    for p in pids:
+        got = s2.read("params", p)
+        assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(got))
+        for u, v in zip(jax.tree.leaves(want[p]), jax.tree.leaves(got)):
+            assert np.array_equal(u.astype(np.float32),
+                                  np.asarray(v, np.float32))
+    # explicit override widens on load: fp32 store from a bf16 ckpt
+    _, s3 = restore_store(str(tmp_path), precision="fp32")
+    got = s3.read("params", pids[0])
+    assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(got))
+
+
+def test_checkpoint_recasts_fp32_down_to_bf16(tmp_path):
+    from repro.checkpoint import restore_store, save_store
+    with PushDistribution(_module(), num_devices=1, capacity=4) as pd:
+        pids = [pd.p_create(sgd(0.1)) for _ in range(2)]
+        want = {p: jax.tree.map(np.asarray, pd.p_params(p)) for p in pids}
+        save_store(str(tmp_path), 2, pd.store)
+    _, s2 = restore_store(str(tmp_path), precision="bf16")
+    assert s2.precision.master == jnp.dtype(jnp.bfloat16)
+    for p in pids:
+        got = s2.read("params", p)
+        for u, v in zip(jax.tree.leaves(want[p]), jax.tree.leaves(got)):
+            assert v.dtype == jnp.bfloat16
+            assert np.array_equal(u.astype(jnp.bfloat16), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# remat-policy menu
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_policy_menu():
+    for name in ("dots_saveable", "nothing_saveable",
+                 "dots_with_no_batch_dims"):
+        assert callable(checkpoint_policy(name))
+    with pytest.raises(ValueError):
+        checkpoint_policy("everything_is_saveable")
+
+
+def test_remat_policy_preserves_transformer_loss_and_grads():
+    from repro import configs
+    from repro.models import api
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=32)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 128)
+    batch = {"tokens": tok, "labels": tok}
+    base, _ = jax.value_and_grad(
+        lambda p: api.loss_fn(p, batch, cfg)[0])(params)
+    for name in ("dots_saveable", "nothing_saveable"):
+        c2 = cfg.replace(remat_policy=name)
+        loss, _ = jax.value_and_grad(
+            lambda p: api.loss_fn(p, batch, c2)[0])(params)
+        assert abs(float(loss) - float(base)) < 1e-4, name
+
+
+# ---------------------------------------------------------------------------
+# policy-aware byte estimates + model-axis sizing
+# ---------------------------------------------------------------------------
+
+def test_param_footprint_halves_under_bf16():
+    from repro import configs
+    from repro.models import api
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=32)
+    f32 = api.param_footprint(cfg)
+    bf16 = api.param_footprint(cfg, "bf16")
+    assert f32 == 2 * bf16
+
+
+def test_pick_model_axis_is_precision_aware():
+    from repro.launch.mesh import pick_model_axis
+    GB = 1 << 30
+    # fp32 particle needs a 4-way split; the bf16 version fits on 2
+    assert pick_model_axis(2 * GB, 4, device_memory_bytes=GB) == 4
+    assert pick_model_axis(1 * GB, 4, device_memory_bytes=GB) == 2
+    assert pick_model_axis(0, 4, device_memory_bytes=GB) == 1
+
+
+def test_store_reports_master_dtype_bytes():
+    from repro.obs.device import store_gauges
+    per = {}
+    for name in ("fp32", "bf16"):
+        with PushDistribution(_module(), num_devices=1, capacity=4,
+                              precision=name) as pd:
+            pd.p_create(sgd(0.1))
+            g = store_gauges(pd.store)
+            per[name] = g["per_particle_bytes"]["params"]
+            assert g["precision"]["master"] == str(get(name).master)
+    assert per["fp32"] == 2 * per["bf16"]
+
+
+def test_tree_bytes_counts_floats_at_master_itemsize():
+    tree = {"w": jnp.zeros((8, 4)), "step": jnp.zeros((), jnp.int32)}
+    assert tree_bytes(tree) == 8 * 4 * 4 + 4
+    assert tree_bytes(tree, "bf16") == 8 * 4 * 2 + 4
