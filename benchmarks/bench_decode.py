@@ -23,9 +23,24 @@ Rows:
   decode/pages/p{P}        peak page occupancy, pool utilisation
   decode/compiles/p{P}     cold compiles in the timed region (want 0)
 
+The PR-10 bar rides the same harness: with ``--speculative``, the
+continuous-batching load is replayed twice over a near-identical
+8-particle ensemble (one root, seven tiny-jitter clones, so the draft
+particle's greedy proposals track the BMA argmax and acceptance is
+high) — once through the plain scheduler, once through the speculative
+one (DESIGN.md §14). Output is token-exact by construction; the ratio
+isolates what draft-K-tokens/verify-once buys in dispatches per token:
+
+  decode/spec_base/p{P}    plain continuous tok/s   (cloned ensemble)
+  decode/spec/p{P}         speculative tok/s + acceptance_rate,
+                           tokens_per_step, mean_k
+  decode/spec_speedup/p{P} ratio, x_over_plain
+  decode/spec_compiles/p{P} cold compiles in the timed region (want 0)
+
 ``python -m benchmarks.run --only decode`` persists the rows to
-BENCH_decode.json; ``python -m benchmarks.bench_decode --require 2.0``
-enforces the speedup + zero-cold-compile bar (CI, both matrix jobs).
+BENCH_decode.json; ``python -m benchmarks.bench_decode --require 2.0
+--speculative --require-spec 1.3`` enforces the speedup +
+zero-cold-compile bars (CI, both sharded matrix jobs).
 """
 from __future__ import annotations
 
@@ -95,7 +110,75 @@ def _drive_continuous(svc, reqs):
     return time.perf_counter() - t0, toks
 
 
-def run(require: float | None = None):
+def _clone_pd(cfg, P):
+    """Near-identical ensemble: one root, P-1 tiny-jitter clones. The
+    draft particle's greedy proposals then track the BMA argmax, so the
+    speculative bench measures the accept-path steady state (high
+    acceptance), not proposal quality."""
+    pd = PushDistribution(_lm_module(cfg), num_devices=1, seed=0,
+                          capacity=P)
+    root = pd.p_create()
+    for _ in range(P - 1):
+        pd.p_clone(root, jitter=1e-3)
+    return pd
+
+
+def run_speculative(require_spec: float | None = None):
+    """Speculative vs plain continuous decode on the same open-loop load
+    and the same cloned ensemble (fresh store each side, identical seed
+    -> identical params)."""
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    reqs = _load(rng)
+    for P in PARTICLES:
+        stats = {}
+        for mode in ("plain", "spec"):
+            with _clone_pd(cfg, P) as pd:
+                svc = serve_decode(pd, cfg, num_pages=NUM_PAGES,
+                                   page_size=PAGE_SIZE,
+                                   max_active=MAX_ACTIVE,
+                                   max_queue=4 * len(reqs),
+                                   decode_kernel=False,
+                                   warmup_buckets=(4, 8, 16),
+                                   speculative=(mode == "spec"))
+                try:
+                    svc.generate(reqs[0][0], max_new=2)
+                    cold0 = global_cache().snapshot_stats()["cold_compiles"]
+                    dt, tok = _drive_continuous(svc, reqs)
+                    cold = global_cache().snapshot_stats()["cold_compiles"] \
+                        - cold0
+                    stats[mode] = (dt, tok, cold, svc.stats())
+                finally:
+                    svc.close()
+        (dt_b, tok_b, cold_b, _) = stats["plain"]
+        (dt_s, tok_s, cold_s, st) = stats["spec"]
+        ss = st["speculative"]
+        emit(f"decode/spec_base/p{P}", dt_b / tok_b * 1e6,
+             f"tok_per_s={tok_b / dt_b:.1f}")
+        emit(f"decode/spec/p{P}", dt_s / tok_s * 1e6,
+             f"tok_per_s={tok_s / dt_s:.1f};"
+             f"acceptance_rate={ss['acceptance_rate']:.3f};"
+             f"tokens_per_step={ss['tokens_per_step']:.2f};"
+             f"mean_k={ss['mean_k']:.2f}")
+        speedup = (tok_s / dt_s) / (tok_b / dt_b)
+        emit(f"decode/spec_speedup/p{P}", speedup, "x_over_plain")
+        emit(f"decode/spec_compiles/p{P}", float(cold_b + cold_s),
+             "cold_compiles_after_warmup")
+
+        if require_spec is not None and P == 8:
+            if cold_s != 0:
+                raise SystemExit(
+                    f"{cold_s} cold compiles during steady-state "
+                    "speculative decode (want 0 after warmup)")
+            if speedup < require_spec:
+                raise SystemExit(
+                    f"speculative/plain decode speedup {speedup:.2f}x "
+                    f"< required {require_spec:.1f}x at {P} particles "
+                    f"(acceptance {ss['acceptance_rate']:.3f})")
+
+
+def run(require: float | None = None, speculative: bool = False,
+        require_spec: float | None = None):
     cfg = _cfg()
     rng = np.random.default_rng(0)
     reqs = _load(rng)
@@ -149,6 +232,8 @@ def run(require: float | None = None):
                             f"at {P} particles")
             finally:
                 svc.close()
+    if speculative or require_spec is not None:
+        run_speculative(require_spec=require_spec)
 
 
 def main():
@@ -157,9 +242,16 @@ def main():
                     help="fail unless continuous/flush >= this at 8 "
                          "particles AND zero cold compiles after warmup "
                          "(acceptance: 2.0)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="also run the speculative vs plain section")
+    ap.add_argument("--require-spec", type=float, default=None,
+                    help="fail unless speculative/plain continuous tok/s "
+                         ">= this at 8 particles AND zero cold compiles "
+                         "after warmup (acceptance: 1.3)")
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    run(require=a.require)
+    run(require=a.require, speculative=a.speculative,
+        require_spec=a.require_spec)
 
 
 if __name__ == "__main__":

@@ -17,8 +17,10 @@ and particle counts); CI enforces the >= 3x micro-batching bar via
 
 Decode rows land in ``BENCH_decode.json`` (continuous-batching vs
 flush-batched tokens/sec, retirement latency percentiles, page-pool
-occupancy); CI enforces the >= 2x continuous-batching bar via
-``bench_decode --require``.
+occupancy, plus speculative-vs-plain tok/s with acceptance rate and
+cold-compile delta); CI enforces the >= 2x continuous-batching bar via
+``bench_decode --require`` and the >= 1.3x speculative bar via
+``--require-spec``.
 
 Compile rows land in ``BENCH_runtime.json`` (cold-compile counts and
 ProgramCache hit rate across the train -> serve lifecycle); CI enforces
@@ -36,6 +38,8 @@ a minimum hit rate via ``bench_compile --require-hit-rate``.
                                           serve latency under clone/kill
   bench_decode           (ours)           continuous-batching paged decode vs
                                           flush-batched (tok/s, p99, pages)
+                                          + speculative BMA decode vs plain
+                                          (tok/s, acceptance, cold compiles)
   bench_obs              (ours)           tracing overhead on the dispatch
                                           hot path (CI gates: disabled <=1%,
                                           enabled <=5%)
@@ -95,7 +99,7 @@ def main() -> None:
         "serve": bench_serve.run,
         "compile": bench_compile.run,
         "lifecycle": bench_lifecycle.run,
-        "decode": bench_decode.run,
+        "decode": functools.partial(bench_decode.run, speculative=True),
         "obs": bench_obs.run,
         "precision": bench_precision.run,
     }

@@ -16,7 +16,15 @@ Contrast with the pre-PR-6 version of this example, which ran a dense
 flush batch: per-request KV sized to max_seq_len and every sequence in
 the batch stepping until the LAST one finished.
 
+With ``--speculative`` the scheduler switches to speculative BMA
+decoding (DESIGN.md §14): one particle drafts K tokens autoregressively,
+then a single fused window program scores all K positions across the
+whole ensemble and accepts the longest prefix that matches the BMA
+argmax. Greedy output is token-exact either way; only the number of
+program dispatches per emitted token changes.
+
 Run:  PYTHONPATH=src python examples/serve_decode.py --requests 12
+      PYTHONPATH=src python examples/serve_decode.py --speculative
 """
 import argparse
 import time
@@ -43,6 +51,12 @@ def main():
     ap.add_argument("--decode-kernel", action="store_true",
                     help="route paged attention through the Pallas kernel "
                          "(interpret mode on CPU: slow but exercised)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative BMA decoding: one particle drafts "
+                         "K tokens, one fused program verifies the window "
+                         "(token-exact, fewer dispatches per token)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max drafted tokens per step (adaptive below)")
     a = ap.parse_args()
 
     cfg = configs.get("qwen1.5-0.5b").replace(
@@ -65,7 +79,8 @@ def main():
         svc = serve_decode(pd, cfg, num_pages=a.num_pages,
                            page_size=a.page_size, max_active=a.max_active,
                            decode_kernel=a.decode_kernel,
-                           warmup_buckets=(8, 16, 32))
+                           warmup_buckets=(8, 16, 32),
+                           speculative=a.draft_k if a.speculative else None)
         try:
             # mixed-length open-loop load: mostly short continuations plus
             # heavy-tail stragglers — the case flush batching handles worst
@@ -95,6 +110,13 @@ def main():
                   f"{st['pool']['num_pages']} "
                   f"preempted={st['preempted']} "
                   f"cold_compiles_after_warmup={cold}")
+            if st.get("speculative"):
+                ss = st["speculative"]
+                print(f"speculative: k_max={ss['k_max']} "
+                      f"acceptance={ss['acceptance_rate']:.2f} "
+                      f"tokens_per_step={ss['tokens_per_step']:.2f} "
+                      f"mean_k={ss['mean_k']:.2f} "
+                      f"rollback_pages={ss['rollback_pages']}")
             g = gens[0]
             print("request 0 tokens   :", g.tokens[:16])
             print("request 0 entropy  :",

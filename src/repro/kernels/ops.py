@@ -55,3 +55,10 @@ def decode_attention(q, k_cache, v_cache, k_pos, c_block: int = 512):
 def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens):
     return _paged.paged_decode_attention(q, k_pages, v_pages, block_tables,
                                          seq_lens, interpret=_interpret())
+
+
+@jax.jit
+def paged_decode_window_attention(q, k_pages, v_pages, block_tables,
+                                  seq_lens):
+    return _paged.paged_decode_window_attention(
+        q, k_pages, v_pages, block_tables, seq_lens, interpret=_interpret())

@@ -75,3 +75,33 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens):
     pos = jnp.where(col <= seq_lens[:, None], col, -1)
     out = decode_attention(q, k, v, pos)
     return jnp.where((seq_lens >= 0)[:, None, None, None], out, 0.0)
+
+
+def paged_decode_window_attention(q, k_pages, v_pages, block_tables,
+                                  seq_lens):
+    """Multi-query (drafted-window) paged decode oracle.
+
+    q: (B,W,H,hd) — window query w sits at absolute position
+    ``seq_lens[b] + w`` and attends causally to positions
+    ``0..seq_lens[b] + w`` through the row's block table; pages
+    (NP,ps,KVH,hd); block_tables (B,n_pmax) i32; seq_lens (B,) i32
+    position of query 0 (-1 = inactive row) -> (B,W,H,hd), inactive
+    rows zeros."""
+    B, W, H, hd = q.shape
+    ps, KVH = k_pages.shape[1], k_pages.shape[2]
+    G = H // KVH
+    n_pmax = block_tables.shape[1]
+    k = jnp.take(k_pages, block_tables, axis=0).reshape(
+        B, n_pmax * ps, KVH, hd)
+    v = jnp.take(v_pages, block_tables, axis=0).reshape(
+        B, n_pmax * ps, KVH, hd)
+    qq = (q / math.sqrt(hd)).reshape(B, W, KVH, G, hd)
+    s = jnp.einsum("bwngh,bknh->bnwgk", qq, k).astype(jnp.float32)
+    limit = seq_lens[:, None] + jnp.arange(W)[None, :]        # (B, W)
+    col = jnp.arange(n_pmax * ps)
+    valid = col[None, None, :] <= limit[:, :, None]           # (B, W, C)
+    s = jnp.where(valid[:, None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bnwgk,bknh->bnwgh", p, v)
+    out = jnp.moveaxis(o, 2, 1).reshape(B, W, H, hd)
+    return jnp.where((seq_lens >= 0)[:, None, None, None], out, 0.0)

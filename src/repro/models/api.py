@@ -25,7 +25,8 @@ from jax import lax
 from .blocks import dense_apply, dense_init, norm_apply, norm_init
 from .transformer import (paged_guard, stack_apply_decode, stack_apply_full,
                           stack_apply_paged, stack_apply_prefill_paged,
-                          stack_cache_init, stack_init, stack_paged_init)
+                          stack_apply_window_paged, stack_cache_init,
+                          stack_init, stack_paged_init)
 from . import vit as vit_mod
 from . import unet1d as unet_mod
 from ..sharding.policy import maybe_shard
@@ -268,6 +269,31 @@ def decode_step_paged(params, tokens, pages, block_tables, seq_lens, cfg, *,
     x = norm_apply(params["final_norm"], x)
     logits = _lm_logits(params, x, cfg)
     return logits[:, 0], pages
+
+
+def decode_window_paged(params, tokens, pages, block_tables, seq_lens,
+                        win_lens, cfg, *, decode_kernel: bool = True):
+    """Speculative verify: score a W-token drafted window in one pass.
+
+    tokens: (B, W) i32 — token w of row b sits at absolute position
+    ``seq_lens[b] + w`` (window token 0 is the last committed token, the
+    rest are drafts); win_lens: (B,) i32 real window tokens per row
+    (positions past win_lens are padding: not written to the pool, logits
+    garbage — mask downstream); seq_lens: (B,) i32 (-1 = inactive row).
+    Returns (logits (B, W, V), pages); logits[:, w] predicts the token
+    AFTER window position w, so accepted drafts need no re-scoring."""
+    paged_guard(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed(params, jnp.maximum(tokens, 0), cfg, dtype)
+    ctx: Dict[str, Any] = {"cache_dtype": _cache_dtype(cfg),
+                           "block_tables": block_tables,
+                           "seq_lens": seq_lens,
+                           "win_lens": win_lens,
+                           "decode_kernel": decode_kernel}
+    x, pages = stack_apply_window_paged(params, x, cfg, pages, ctx)
+    x = norm_apply(params["final_norm"], x)
+    logits = _lm_logits(params, x, cfg)
+    return logits, pages
 
 
 def prefill_paged(params, tokens, pages, block_table_row, n_tokens, cfg):

@@ -456,6 +456,67 @@ def attn_apply_paged(p, x, cfg, pages, *, block_tables, seq_lens,
     return out, {"k": k_pages, "v": v_pages}
 
 
+def paged_window_attention(q, k_pages, v_pages, *, block_tables, seq_lens,
+                           use_kernel: bool = True):
+    """Speculative-verify attention over a paged KV pool.
+
+    q: (B, W, H, hd) — window query w sits at absolute position
+    ``seq_lens[b] + w``; same pool/table conventions as
+    :func:`paged_attention`. seq_lens is the position of query 0
+    (-1 = inactive row)."""
+    if use_kernel:
+        from ..kernels import ops as _kops
+        return _kops.paged_decode_window_attention(q, k_pages, v_pages,
+                                                   block_tables, seq_lens)
+    from ..kernels import ref as _kref
+    return _kref.paged_decode_window_attention(q, k_pages, v_pages,
+                                               block_tables, seq_lens)
+
+
+def attn_apply_window_paged(p, x, cfg, pages, *, block_tables, seq_lens,
+                            win_lens, use_kernel: bool = True):
+    """One speculative verify step (drafted window) for one attn layer.
+
+    x: (B, W, D) — token w of row b sits at absolute position
+    ``seq_lens[b] + w``; win_lens: (B,) i32 — number of real window
+    tokens per row (positions past win_lens are padding and are neither
+    written to the pool nor trusted downstream). Rows with seq_lens < 0
+    are inactive. The window K/V are scattered into the pool FIRST, then
+    the window attends — so query w sees drafted tokens 0..w (causal
+    within the window via the position mask) plus the full committed
+    prefix. Returns (out (B, W, D), new_pages).
+    """
+    if cfg.logit_softcap > 0.0:
+        raise NotImplementedError("paged decode does not support logit softcap")
+    B, W, _ = x.shape
+    hd = cfg.hd
+    q = dense_apply(p["wq"], x).reshape(B, W, cfg.n_heads, hd)
+    k = dense_apply(p["wk"], x).reshape(B, W, cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], x).reshape(B, W, cfg.n_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        pos = jnp.maximum(seq_lens, 0)[:, None] + jnp.arange(W)[None, :]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    NP, ps = pages["k"].shape[0], pages["k"].shape[1]
+    active = seq_lens >= 0
+    w_arange = jnp.arange(W)[None, :]                       # (1, W)
+    valid = active[:, None] & (w_arange < win_lens[:, None])  # (B, W)
+    abs_pos = jnp.where(valid, seq_lens[:, None] + w_arange, 0)
+    logical = abs_pos // ps                                  # (B, W)
+    page_idx = jnp.take_along_axis(block_tables, logical, axis=1)
+    page_idx = jnp.where(valid, page_idx, NP)     # out of range -> dropped
+    slot = abs_pos % ps
+    k_pages = pages["k"].at[page_idx, slot].set(
+        k.astype(pages["k"].dtype), mode="drop")
+    v_pages = pages["v"].at[page_idx, slot].set(
+        v.astype(pages["v"].dtype), mode="drop")
+    out = paged_window_attention(q, k_pages, v_pages,
+                                 block_tables=block_tables,
+                                 seq_lens=seq_lens, use_kernel=use_kernel)
+    out = dense_apply(p["wo"], out.reshape(B, W, -1))
+    return out, {"k": k_pages, "v": v_pages}
+
+
 def attn_apply_prefill_paged(p, x, cfg, pages, *, block_table_row, n_tokens):
     """Chunked prompt prefill for ONE sequence into the page pool.
 

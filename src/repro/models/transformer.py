@@ -18,9 +18,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from .blocks import (attn_apply_decode, attn_apply_fullseq, attn_apply_paged,
-                     attn_apply_prefill_paged, attn_cache_init, attn_init,
-                     attn_pages_init, dense_apply, dense_init, mlp_apply,
-                     mlp_init, norm_apply, norm_init)
+                     attn_apply_prefill_paged, attn_apply_window_paged,
+                     attn_cache_init, attn_init, attn_pages_init, dense_apply,
+                     dense_init, mlp_apply, mlp_init, norm_apply, norm_init)
 from . import moe as moe_mod
 from . import rwkv as rwkv_mod
 from . import mamba as mamba_mod
@@ -336,6 +336,19 @@ def _layer_apply_paged(kind, p, x, cfg, pages, ctx):
     return x + h, pages
 
 
+def _layer_apply_window_paged(kind, p, x, cfg, pages, ctx):
+    h, pages = attn_apply_window_paged(
+        p["attn"], norm_apply(p["ln1"], x), cfg, pages,
+        block_tables=ctx["block_tables"], seq_lens=ctx["seq_lens"],
+        win_lens=ctx["win_lens"], use_kernel=ctx.get("decode_kernel", True))
+    x = x + h
+    if kind == "attn_moe":
+        h, _ = moe_mod.moe_apply(p["moe"], norm_apply(p["ln2"], x), cfg)
+    else:
+        h = mlp_apply(p["mlp"], norm_apply(p["ln2"], x), cfg)
+    return x + h, pages
+
+
 def _layer_apply_prefill_paged(kind, p, x, cfg, pages, ctx):
     h, pages = attn_apply_prefill_paged(
         p["attn"], norm_apply(p["ln1"], x), cfg, pages,
@@ -382,6 +395,15 @@ def stack_apply_paged(params, x, cfg, pages, ctx):
     ctx: block_tables (B, n_pmax), seq_lens (B,). Returns (x, pages)."""
     return _stack_apply_paged_common(params, x, cfg, pages, ctx,
                                      _layer_apply_paged)
+
+
+def stack_apply_window_paged(params, x, cfg, pages, ctx):
+    """Speculative-verify step over a drafted window. x: (B, W, D);
+    ctx: block_tables (B, n_pmax), seq_lens (B,) (position of window
+    token 0, -1 = inactive), win_lens (B,) real window tokens per row.
+    Returns (x, pages)."""
+    return _stack_apply_paged_common(params, x, cfg, pages, ctx,
+                                     _layer_apply_window_paged)
 
 
 def stack_apply_prefill_paged(params, x, cfg, pages, ctx):

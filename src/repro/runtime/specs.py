@@ -131,6 +131,113 @@ def paged_prefill(prefill_fn: Callable, reduce_fn: Callable, *, n_pmax: int,
         donate=(1,))
 
 
+def spec_draft_step(decode_fn: Callable, *, k_max: int, key: Tuple,
+                    quantized: bool = False,
+                    dequant_dtype=jnp.float32) -> ProgramSpec:
+    """Draft ``k_max`` tokens per row from ONE particle, in ONE program.
+
+    ``decode_fn`` is the same single-row closure ``paged_decode_step``
+    vmaps — here it runs un-vmapped on the draft particle's slice, inside
+    an internal ``lax.scan`` over the drafted positions (token argmax fed
+    back in-trace, the pages row as carry), so a whole drafted window
+    costs one dispatch. The packed input is ``(B, 3 + n_pmax)`` i32 —
+    ``[:, 0]`` last committed token, ``[:, 1]`` its absolute position
+    (-1 = inactive row), ``[:, 2]`` per-row draft length k in
+    ``[0, k_max]`` (adaptive-K is a runtime value; the program shape is
+    fixed at ``k_max``), ``[:, 3:]`` block tables. The draft slot arrives
+    as a traced i32 scalar — clone/kill churn re-picks it without
+    touching the cache key. Returns ``(drafts (B, k_max) i32,
+    new_pages)``; entries past a row's k are garbage the host ignores.
+
+    ``quantized=True`` swaps the first operand from the stacked params to
+    a pre-sliced int8 pack (leading axis 1, as built by
+    ``precision.quantize_int8``), dequantized in-trace — the draft then
+    costs int8 memory traffic and zero live-slot time, while verify
+    still reads only full-precision particles."""
+    def make(ctx):
+        def fused(params_in, pages, packed, slot):
+            tok0, sl0 = packed[:, 0], packed[:, 1]
+            k_lens, bt = packed[:, 2], packed[:, 3:]
+            if quantized:
+                row = precision_mod.dequantize(params_in, dequant_dtype)
+                params_row = jax.tree.map(lambda a: a[0], row)
+            else:
+                params_row = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, slot, 0, keepdims=False), params_in)
+            pages_row = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, slot, 0, keepdims=False), pages)
+
+            def step(carry, j):
+                tok, sl, pg = carry
+                live = (sl >= 0) & (j < k_lens)
+                logits, pg = decode_fn(params_row, pg, tok, bt,
+                                       jnp.where(live, sl, -1))
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                tok = jnp.where(live, nxt, tok)
+                sl = sl + live.astype(jnp.int32)
+                return (tok, sl, pg), tok
+
+            (_, _, pages_row), drafts = jax.lax.scan(
+                step, (tok0, sl0, pages_row), jnp.arange(k_max))
+            new_pages = jax.tree.map(
+                lambda full, r: jax.lax.dynamic_update_index_in_dim(
+                    full, r.astype(full.dtype), slot, 0), pages, pages_row)
+            return drafts.T, new_pages
+
+        return fused
+
+    return ProgramSpec(
+        name="spec_draft_step",
+        key=("spec_draft_step", k_max, bool(quantized),
+             jnp.dtype(dequant_dtype).name) + tuple(key),
+        make=make,
+        in_kinds=(("replicated" if quantized else "state"),
+                  "state", "replicated", "replicated"),
+        out_kinds=("replicated", "in:1"),
+        donate=(1,))
+
+
+def spec_verify(verify_fn: Callable, reduce_fn: Callable, *, w_max: int,
+                key: Tuple) -> ProgramSpec:
+    """Score a drafted window across the whole ensemble in one pass.
+
+    ``verify_fn(params_row, pages_row, tokens (B, W), block_tables,
+    seq_lens, win_lens) -> (logits (B, W, V), pages_row)`` is vmapped
+    over the stacked particle axis. The packed input is
+    ``(B, w_max + 2 + n_pmax)`` i32 — ``[:, :W]`` window tokens (the last
+    committed token followed by the drafts), ``[:, W]`` the absolute
+    position of window token 0 (-1 = inactive), ``[:, W+1]`` the live
+    window length, ``[:, W+2:]`` block tables. ``reduce_fn(member logits
+    (P, B, W, V), mask, ctx)`` yields the per-position BMA heads the
+    accept rule consumes. The verify scatter overwrites the draft
+    particle's drafted KV with bit-identical values and writes every
+    other particle's, so an accepted prefix leaves the pool exactly as k
+    sequential committed steps would."""
+    def make(ctx):
+        def fused(stacked_params, pages, packed, mask):
+            tokens = packed[:, :w_max]
+            seq_lens = packed[:, w_max]
+            win_lens = packed[:, w_max + 1]
+            bt = packed[:, w_max + 2:]
+            logits, new_pages = jax.vmap(
+                verify_fn, in_axes=(0, 0, None, None, None, None),
+                spmd_axis_name=ctx.spmd_axis)(
+                stacked_params, pages, tokens, bt, seq_lens, win_lens)
+            return reduce_fn(logits, mask, ctx), new_pages
+
+        return fused
+
+    return ProgramSpec(
+        name="spec_verify",
+        key=("spec_verify", w_max) + tuple(key),
+        make=make,
+        in_kinds=("state", "state", "replicated", "replicated"),
+        out_kinds=("replicated", "in:1"),
+        donate=(1,))
+
+
 def map_step(fn: Callable, *, key: Tuple, n_state: int = 1,
              donate: Tuple[int, ...] = (0,), masked: bool = False
              ) -> ProgramSpec:

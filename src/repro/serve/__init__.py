@@ -8,6 +8,9 @@
 #                  decode (admit/retire each step, page backpressure)
 # paging.py      — paged KV pool: store scratch key + host free-page
 #                  allocator and per-sequence block tables
+# speculative.py — speculative BMA decode: one particle drafts K tokens,
+#                  one fused verify program scores the window, accepts
+#                  the longest matching prefix (token-exact greedy BMA)
 # uncertainty.py — predictive heads (BMA mean, variance, entropy, BALD MI)
 # metrics.py     — NLL / ECE / Brier (+ NumPy references for tests)
 # service.py     — serve(pd).predict(x) / serve_decode(pd).generate(ids)
@@ -16,5 +19,7 @@ from . import metrics, uncertainty
 from .batcher import DecodeScheduler, Generation, MicroBatcher
 from .engine import PagedDecodeEngine, PredictiveEngine, bucket_size, pad_rows
 from .paging import PagePool, create_kv_pages
+from .speculative import (SpecConfig, SpecDecodeEngine,
+                          SpeculativeDecodeScheduler)
 from .service import (DecodeService, PendingGeneration, PendingPrediction,
                       Prediction, PredictiveService, serve, serve_decode)

@@ -580,11 +580,13 @@ class DecodeScheduler:
             self.stats["h2d_transfers"] += 1
             return jax.device_get(self.engine.prefill(buf))
 
-    def _ensure_page(self, seq: _Seq) -> bool:
-        """Make the page for ``seq``'s next write position resident;
-        preempt youngest rows while the pool is dry. False iff ``seq``
-        itself got preempted (it WAS the youngest)."""
-        need = (len(seq.all_tokens) - 1) // self.pool.page_size + 1
+    def _ensure_page(self, seq: _Seq, extra: int = 0) -> bool:
+        """Make the page for ``seq``'s next write position resident —
+        plus ``extra`` further positions (a speculative draft window
+        writes through position ``len - 1 + extra``); preempt youngest
+        rows while the pool is dry. False iff ``seq`` itself got
+        preempted (it WAS the youngest)."""
+        need = (len(seq.all_tokens) - 1 + extra) // self.pool.page_size + 1
         while len(self.pool.pages_of(seq.sid)) < need:
             if self.pool.alloc(seq.sid,
                                need - len(self.pool.pages_of(seq.sid))):
@@ -667,6 +669,9 @@ class DecodeScheduler:
         # histogram + resident bytes, so bf16/fp8 pools are visible in
         # pd.stats()["decode"] next to the page-churn counters
         out["kv_pages"] = self.engine.kv_page_info()
+        # speculative-decode gauges (DESIGN.md §14): None on the plain
+        # scheduler; SpeculativeDecodeScheduler fills the section in
+        out["speculative"] = None
         return out
 
     # -- lifecycle -----------------------------------------------------------

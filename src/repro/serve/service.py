@@ -233,7 +233,8 @@ def serve_decode(obj, cfg=None, *, num_pages: int, page_size: int,
                  decode_kernel: bool = True, cache_dtype=None,
                  placement: Optional[Placement] = None,
                  pages_key: str = "kv_pages", warmup: bool = True,
-                 warmup_buckets=(), precision: Any = None) -> DecodeService:
+                 warmup_buckets=(), precision: Any = None,
+                 speculative: Any = None) -> DecodeService:
     """Turn a PushDistribution holding an LM ensemble into a
     continuous-batching posterior-predictive decode service.
 
@@ -252,9 +253,17 @@ def serve_decode(obj, cfg=None, *, num_pages: int, page_size: int,
     bucket in ``warmup_buckets``) so steady-state serving never cold
     compiles. ``pd.stats()`` grows a ``decode`` section while the service
     lives.
+
+    ``speculative=`` turns on speculative BMA decoding (DESIGN.md §14):
+    ``True`` for defaults, an int for that many drafted tokens per step,
+    or a ``serve.SpecConfig`` for the full policy (adaptive K, int8
+    draft). Greedy output stays token-exact; only throughput changes.
     """
     from ..models import api as models_api
+    from .speculative import (SpecDecodeEngine, SpeculativeDecodeScheduler,
+                              resolve_spec_config)
 
+    spec_cfg = resolve_spec_config(speculative)
     pd = _resolve_pd(obj)
     cfg = cfg if cfg is not None else getattr(pd.module, "cfg", None)
     if cfg is None:
@@ -285,11 +294,27 @@ def serve_decode(obj, cfg=None, *, num_pages: int, page_size: int,
                                             dtype=cache_dtype),
         key=pages_key)
     pool = PagePool(num_pages, page_size, max_seq_pages=n_pmax)
-    engine = PagedDecodeEngine(decode_fn, prefill_fn, store=pd.store,
-                               n_pmax=n_pmax, pages_key=pages_key,
-                               placement=placement, precision=precision)
-    scheduler = DecodeScheduler(engine, pool, max_active=max_active,
-                                eos_id=eos_id, max_queue=max_queue)
+    if spec_cfg is not None:
+        def verify_fn(params, pages, tokens, block_tables, seq_lens,
+                      win_lens):
+            return models_api.decode_window_paged(
+                params, tokens, pages, block_tables, seq_lens, win_lens,
+                cfg, decode_kernel=decode_kernel)
+
+        engine = SpecDecodeEngine(decode_fn, prefill_fn, verify_fn,
+                                  spec_cfg=spec_cfg, store=pd.store,
+                                  n_pmax=n_pmax, pages_key=pages_key,
+                                  placement=placement, precision=precision)
+        scheduler = SpeculativeDecodeScheduler(engine, pool,
+                                               max_active=max_active,
+                                               eos_id=eos_id,
+                                               max_queue=max_queue)
+    else:
+        engine = PagedDecodeEngine(decode_fn, prefill_fn, store=pd.store,
+                                   n_pmax=n_pmax, pages_key=pages_key,
+                                   placement=placement, precision=precision)
+        scheduler = DecodeScheduler(engine, pool, max_active=max_active,
+                                    eos_id=eos_id, max_queue=max_queue)
     if warmup:
         scheduler.warmup(warmup_buckets)
     return DecodeService(scheduler)

@@ -271,6 +271,59 @@ def test_decode_serving_survives_churn_with_zero_cold_compiles():
             svc.close()
 
 
+def test_speculative_decode_survives_churn_with_zero_cold_compiles():
+    """Speculative BMA decode under clone/kill churn: the draft program
+    slices the draft row by a *traced* slot scalar and the verify
+    program runs on the capacity-padded stack, so within-capacity churn
+    — including killing the current draft particle, forcing a slot
+    re-pick — recompiles nothing, never bumps the generation, and after
+    the round-trip reproduces the pre-churn tokens exactly."""
+    from repro import configs
+    from repro.models import api
+    from repro.serve import serve_decode
+
+    cfg = configs.get("qwen1.5-0.5b").replace(
+        n_units=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, max_seq_len=64)
+    lm = ParticleModule(
+        init=lambda rng: api.init_params(rng, cfg),
+        loss=lambda p, b: api.loss_fn(p, b, cfg),
+        forward=lambda p, b: api.forward(p, b, cfg)[0], cfg=cfg)
+    prompt = [3, 5, 7, 11, 13]
+    with PushDistribution(lm, num_devices=1, seed=0, capacity=4) as pd:
+        pids = [pd.p_create() for _ in range(2)]
+        svc = serve_decode(pd, cfg, num_pages=16, page_size=8,
+                           max_active=2, warmup_buckets=(8,),
+                           speculative=True)
+        try:
+            base = svc.generate(prompt, max_new=4)
+            cold = _cold()
+            gen = pd.store.generation()
+            with svc.scheduler.step_lock:          # churn vs decode steps
+                twin = pd.p_clone(pids[0], jitter=0.01)
+            widened = svc.generate(prompt, max_new=4)
+            assert len(widened.tokens) == 4        # BMA over 3 live rows
+            with svc.scheduler.step_lock:
+                pd.p_kill(twin)
+            back = svc.generate(prompt, max_new=4)
+            assert back.tokens == base.tokens      # live set restored
+            with svc.scheduler.step_lock:
+                # kill the particle currently drafting: the engine must
+                # re-pick a live slot (one scalar upload, no compile)
+                pd.p_kill(pids[0])
+            solo = svc.generate(prompt, max_new=4)
+            assert len(solo.tokens) == 4
+            assert _cold() == cold, "spec decode churn must not recompile"
+            assert pd.store.generation() == gen
+            dec = svc.stats()
+            assert dec["retired"] == 4
+            assert dec["pool"]["used_pages"] == 0
+            assert dec["engine"]["slot_uploads"] >= 2
+            assert dec["speculative"]["spec_steps"] > 0
+        finally:
+            svc.close()
+
+
 def test_bf16_serving_survives_churn_with_zero_cold_compiles():
     """PR 5's invariant survives the precision ladder: on a store with a
     bf16 serve copy ("mixed"), clone/kill churn compiles NOTHING — the

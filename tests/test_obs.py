@@ -149,10 +149,12 @@ def test_decode_stats_golden_schema():
                 "prefills", "generated_tokens", "active_row_steps",
                 "admission_blocked", "h2d_transfers", "errors",
                 "max_queue_depth", "queue_depth", "active_seqs",
-                "max_active", "row_occupancy", "pool", "kv_pages"}
+                "max_active", "row_occupancy", "pool", "kv_pages",
+                "speculative"}
             assert set(dec["kv_pages"]) == {"key", "dtypes",
                                             "per_device_bytes"}
             assert dec["kv_pages"]["key"] == "kv_pages"
+            assert dec["speculative"] is None   # plain scheduler
             st = svc.stats()
             assert st["latency_p99_ms"] >= st["latency_p50_ms"] > 0.0
             assert st["tokens_per_s"] > 0.0

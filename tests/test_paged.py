@@ -59,6 +59,40 @@ def test_page_pool_max_seq_pages_and_block_row():
         PagePool(0, 4, 2)
 
 
+def test_page_pool_release_tail_invariants():
+    """Rejected-draft rollback: tail truncation is page-granular, free
+    counts are conserved, block tables stay consistent, and releasing a
+    sequence the pool does not own raises."""
+    pool = PagePool(num_pages=8, page_size=4, max_seq_pages=8)
+    pool.alloc(3, 5)                            # covers 20 token positions
+    assert pool.free_pages == 3
+    owned_before = pool.pages_of(3)
+    # 9 tokens need ceil(9/4) = 3 pages: 2 come back, prefix preserved
+    assert pool.release_tail(3, 9) == 2
+    assert pool.free_pages == 5
+    assert pool.pages_of(3) == owned_before[:3]
+    row = np.full((8,), -9, np.int32)
+    pool.fill_block_row(3, row)
+    assert row[:3].tolist() == owned_before[:3] and row[3:].tolist() == [0] * 5
+    # page-granular: a partially-used last page is kept
+    assert pool.release_tail(3, 9) == 0
+    assert pool.release_tail(3, 12) == 0        # exact page boundary
+    # n_tokens = 0 keeps zero pages (sequence stays owned, list empty)
+    assert pool.release_tail(3, 0) == 3
+    assert pool.free_pages == 8 and pool.pages_of(3) == []
+    # conservation: freed pages are allocatable again
+    assert pool.alloc(4, 8) is not None
+    st = pool.snapshot_stats()
+    assert st["allocs"] == 13 and st["releases"] == 5
+    with pytest.raises(ValueError):
+        pool.release_tail(3, -1)
+    pool.release(3)                             # full release pops the seq
+    with pytest.raises(KeyError):               # double release raises
+        pool.release_tail(3, 1)
+    with pytest.raises(KeyError):               # never-owned seq raises
+        pool.release_tail(77, 1)
+
+
 # ---------------------------------------------------------------------------
 # paged decode kernel vs oracle and vs the dense decode kernel
 # ---------------------------------------------------------------------------
